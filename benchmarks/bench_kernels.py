@@ -1,0 +1,52 @@
+"""Count-sketch kernel micro-benchmarks (the paper's compute hot-spot).
+
+Times the XLA scatter path on CPU (the runtime here) and runs the Pallas
+MXU path in interpret mode for validation-only timing.  On the TPU target
+the Pallas path is the production encode; CPU numbers are reference
+points, not TPU projections.  Derived: throughput in M elements/s.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=10):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    out = []
+    for n in (1 << 16, 1 << 20):
+        v = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        enc = jax.jit(lambda x: ops.sketch_encode(x, 0, 5, 1 << 16,
+                                                  impl="xla"))
+        us = _time(enc, v)
+        out.append((f"kernel_encode_xla_n{n}", us,
+                    f"{n / us:.1f}Melem_per_s"))
+        tbl = enc(v)
+        est = jax.jit(lambda t: ops.sketch_estimate(t, 0, n, impl="xla"))
+        us = _time(est, tbl)
+        out.append((f"kernel_estimate_xla_n{n}", us,
+                    f"{n / us:.1f}Melem_per_s"))
+    # Pallas interpret-mode single-shot (validation path; CPU emulation)
+    v = jnp.asarray(rng.normal(size=1 << 14).astype(np.float32))
+    t0 = time.time()
+    ops.sketch_encode(v, 0, 3, 4096, impl="pallas")
+    us = (time.time() - t0) * 1e6
+    out.append(("kernel_encode_pallas_interpret_n16384", us,
+                "interpret_mode_validation_only"))
+    return out

@@ -1,0 +1,43 @@
+"""Benchmark harness entry: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the full
+(arch x shape) matrix come from ``python -m repro.launch.dryrun --all``
+(see EXPERIMENTS.md §Dry-run / §Roofline); this harness covers the
+paper-reproduction benches + kernel micro-benchmarks, all CPU-runnable.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (bench_compression, bench_convergence, bench_kernels,
+               bench_sketch_aggregation, bench_true_topk)
+
+MODULES = [
+    ("table1", bench_compression),
+    ("kernels", bench_kernels),
+    ("fig3/4/5", bench_convergence),
+    ("fig10", bench_true_topk),
+    ("sec3.2", bench_sketch_aggregation),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for label, mod in MODULES:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception:
+            traceback.print_exc()
+            failed.append(label)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""§Perf hillclimb driver: run named variants of the three chosen pairs.
+
+Each variant is a (hypothesis, change) pair from EXPERIMENTS.md §Perf;
+results append to results/hillclimb.json for the iteration log.
+
+    PYTHONPATH=src python scripts/hillclimb.py <variant-name>
+    PYTHONPATH=src python scripts/hillclimb.py --list
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch import dryrun  # noqa: E402
+
+# variant -> (arch, shape, run_one kwargs)
+VARIANTS = {
+    # -- pair A: llama4 train_4k (most collective-bound; EP + sketch) ------
+    "A0_baseline": ("llama4-maverick-400b-a17b", "train_4k", {}),
+    "A1_model_local_sketch": ("llama4-maverick-400b-a17b", "train_4k",
+                              dict(sketch_mode="model_local")),
+    "A2_ml_donate": ("llama4-maverick-400b-a17b", "train_4k",
+                     dict(sketch_mode="model_local", donate=True)),
+    "A3_ml_bf16_attn": ("llama4-maverick-400b-a17b", "train_4k",
+                        dict(sketch_mode="model_local", donate=True,
+                             cfg_overrides=dict(
+                                 attn_compute_dtype="bfloat16"))),
+    # -- pair B: jamba train_4k (worst roofline fraction: memory 6.7s) -----
+    "B0_jamba_baseline": ("jamba-v0.1-52b", "train_4k", {}),
+    "B1_jamba_model_local": ("jamba-v0.1-52b", "train_4k",
+                             dict(sketch_mode="model_local")),
+    "B2_jamba_ssm_remat": ("jamba-v0.1-52b", "train_4k",
+                           dict(sketch_mode="model_local",
+                                cfg_overrides=dict(ssm_remat=True))),
+    "B3_jamba_full_opt": ("jamba-v0.1-52b", "train_4k",
+                          dict(sketch_mode="model_local", donate=True,
+                               cfg_overrides=dict(
+                                   ssm_remat=True,
+                                   attn_compute_dtype="bfloat16"))),
+    # B4: ssm_remat now ALSO recomputes (dt, B, C) inside the chunk (the
+    # scan saves only conv activations) — measures the fused variant.
+    "B4_jamba_fused_sel": ("jamba-v0.1-52b", "train_4k",
+                           dict(sketch_mode="model_local", donate=True,
+                                cfg_overrides=dict(
+                                    ssm_remat=True,
+                                    attn_compute_dtype="bfloat16"))),
+    # -- bonus: deepseek-7b decode_32k (worst serving memory term) ---------
+    "D0_baseline": ("deepseek-7b", "decode_32k", {}),
+    "D1_donate_cache": ("deepseek-7b", "decode_32k", dict(donate=True)),
+    "D2_bf16_attend": ("deepseek-7b", "decode_32k",
+                       dict(donate=True,
+                            cfg_overrides=dict(
+                                attn_compute_dtype="bfloat16"))),
+    # -- pair C: qwen2-moe train_4k (paper-representative mid-size MoE) ----
+    "C0_baseline": ("qwen2-moe-a2.7b", "train_4k", {}),
+    "C1_model_local_sketch": ("qwen2-moe-a2.7b", "train_4k",
+                              dict(sketch_mode="model_local")),
+    "C2_ml_donate_bf16": ("qwen2-moe-a2.7b", "train_4k",
+                          dict(sketch_mode="model_local", donate=True,
+                               cfg_overrides=dict(
+                                   attn_compute_dtype="bfloat16"))),
+    # dense-psum ablation (what FetchSGD's sketch replaces)
+    "C3_dense_aggregate": ("qwen2-moe-a2.7b", "train_4k",
+                           dict(aggregate="dense",
+                                sketch_mode="model_local", donate=True)),
+}
+
+OUT = Path(__file__).resolve().parent.parent / "results" / "hillclimb.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("variants", nargs="*")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list or not args.variants:
+        for k, (a, s, kw) in VARIANTS.items():
+            print(f"{k}: {a} x {s} {kw}")
+        return
+    for name in args.variants:
+        arch, shape, kw = VARIANTS[name]
+        roof, dt, n_params = dryrun.run_one(arch, shape, **kw)
+        with open(OUT, "a") as f:
+            f.write(json.dumps({
+                "variant": name, "arch": arch, "shape": shape,
+                "kwargs": {k: str(v) for k, v in kw.items()},
+                "t_compute": roof.t_compute, "t_memory": roof.t_memory,
+                "t_collective": roof.t_collective,
+                "bottleneck": roof.bottleneck,
+                "coll_detail": roof.coll_detail,
+                "peak_mem": roof.peak_mem_bytes,
+                "hbm_bytes": roof.hbm_bytes,
+                "compile_s": dt}) + "\n")
+
+
+if __name__ == "__main__":
+    main()

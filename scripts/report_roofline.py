@@ -1,0 +1,29 @@
+"""Render the §Roofline table from dryrun JSONL results."""
+import json
+import sys
+
+
+def main(paths):
+    rows = []
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                try:
+                    rows.append(json.loads(line))
+                except Exception:
+                    pass
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                             r.get("aggregate", "")))
+    print("| arch | shape | mesh | agg | t_comp(ms) | t_mem(ms) | t_coll(ms) "
+          "| bottleneck | useful | peak GiB |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {r.get('aggregate','-')} "
+              f"| {r['t_compute']*1e3:.2f} | {r['t_memory']*1e3:.2f} "
+              f"| {r['t_collective']*1e3:.2f} | {r['bottleneck']} "
+              f"| {r['useful']:.3f} | {r['peak_mem']/2**30:.2f} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,3 @@
+"""repro — FetchSGD (ICML 2020) as a production-grade JAX training framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,46 @@
+"""Uncompressed distributed SGD with (server-side) momentum.
+
+The paper's "Uncompressed" rows: clients upload the full d-dim gradient,
+download the full d-dim update.  Compression is 1x by definition; it is the
+quality baseline every method is measured against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    momentum: float = 0.9
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SGDState:
+    velocity: object  # pytree like params
+    step: jax.Array
+
+
+def init_state(params, cfg: SGDConfig) -> SGDState:
+    return SGDState(velocity=jax.tree.map(jnp.zeros_like, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def step(params, grads, state: SGDState, lr, cfg: SGDConfig):
+    vel = jax.tree.map(lambda v, g: cfg.momentum * v + g,
+                       state.velocity, grads)
+    new_params = jax.tree.map(lambda p, v: p - lr * v.astype(p.dtype),
+                              params, vel)
+    return new_params, SGDState(velocity=vel, step=state.step + 1)
+
+
+def upload_bytes(d: int) -> int:
+    return d * 4
+
+
+def download_bytes(d: int) -> int:
+    return d * 4

@@ -1,0 +1,46 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own).
+
+``get_config(name)`` returns the full ArchConfig; ``get_smoke(name)`` the
+reduced same-family variant used by CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ArchConfig, reduce_for_smoke
+
+ARCHS = (
+    "qwen2-moe-a2.7b",
+    "whisper-small",
+    "xlstm-350m",
+    "pixtral-12b",
+    "llama4-maverick-400b-a17b",
+    "deepseek-7b",
+    "qwen3-0.6b",
+    "glm4-9b",
+    "jamba-v0.1-52b",
+    "internlm2-1.8b",
+    # the paper's own experiment model (Sec. 5.3)
+    "gpt2s-federated",
+)
+
+_MOD = {name: name.replace("-", "_").replace(".", "_") for name in ARCHS}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MOD:
+        raise KeyError(f"unknown arch {name!r}; available: {list(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{_MOD[name]}")
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MOD[name]}")
+    if hasattr(mod, "SMOKE"):
+        return mod.SMOKE
+    return reduce_for_smoke(get_config(name))
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCHS

@@ -1,0 +1,4 @@
+"""FetchSGD core: Count Sketch, layout, top-k, optimizer, accounting."""
+
+from . import (compression, count_sketch, fetchsgd, hashing, layout,
+               sliding_window, topk)  # noqa: F401

@@ -1,0 +1,221 @@
+"""Count Sketch (Charikar et al., 2002) as a linear, mergeable JAX pytree.
+
+This is the data structure at the heart of FetchSGD.  The sketch of a vector
+``g`` is an ``(r, c)`` table where row ``j`` holds
+``T[j, h_j(i)] += s_j(i) * g_i`` with per-row bucket hashes ``h_j`` and
+Rademacher signs ``s_j``.  Crucially the map ``g -> T`` is *linear*:
+
+    sketch(a*g1 + b*g2) == a*sketch(g1) + b*sketch(g2)
+
+which is what lets FetchSGD (i) aggregate client sketches into the sketch of
+the aggregate gradient, and (ii) carry momentum and error accumulation out on
+the server entirely inside sketch space (Sec. 3.2 of the paper).
+
+Element identities are global 64-bit ids so that sketching a *slice* of the
+gradient (a model-parallel shard, or one pytree leaf) composes linearly into
+the sketch of the full gradient.
+
+The pure-jnp scatter/gather implementation here is the reference path; the
+Pallas TPU kernel in ``repro.kernels`` implements the same map with an
+MXU-friendly one-hot contraction and is validated against this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import hashing
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CountSketch:
+    """An (r, c) Count Sketch table plus its static hash identity."""
+
+    table: jax.Array
+    rows: int = dataclasses.field(metadata=dict(static=True))
+    cols: int = dataclasses.field(metadata=dict(static=True))
+    key: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    # -- linear-space algebra ------------------------------------------------
+    def __add__(self, other: "CountSketch") -> "CountSketch":
+        self._check_compat(other)
+        return dataclasses.replace(self, table=self.table + other.table)
+
+    def __sub__(self, other: "CountSketch") -> "CountSketch":
+        self._check_compat(other)
+        return dataclasses.replace(self, table=self.table - other.table)
+
+    def scale(self, a) -> "CountSketch":
+        return dataclasses.replace(self, table=self.table * a)
+
+    def _check_compat(self, other: "CountSketch") -> None:
+        if (self.rows, self.cols, self.key) != (other.rows, other.cols, other.key):
+            raise ValueError("CountSketch hash identities differ; cannot merge.")
+
+    # -- norms ---------------------------------------------------------------
+    def l2_estimate(self) -> jax.Array:
+        """AMS-style estimate of ||g||: median over rows of row l2 norms."""
+        return jnp.median(jnp.linalg.norm(self.table, axis=1))
+
+
+def zeros(rows: int, cols: int, key: int = 0,
+          dtype=jnp.float32) -> CountSketch:
+    return CountSketch(jnp.zeros((rows, cols), dtype), rows, cols, key)
+
+
+def _hashes_for_range(offset: int, n: int, rows: int, cols: int, key: int):
+    """(idx, sign) arrays of shape (rows, n) for global ids offset..offset+n."""
+    hi, lo = hashing.split64(offset, n)
+    idx = jnp.stack([hashing.bucket_hash(lo, hi, j, cols, key) for j in range(rows)])
+    sgn = jnp.stack([hashing.sign_hash(lo, hi, j, key) for j in range(rows)])
+    return idx, sgn
+
+
+def _hashes_for_range_dyn(off_lo, off_hi, n: int, rows: int, cols: int,
+                          key: int):
+    """Same as _hashes_for_range but with a traced 64-bit base offset."""
+    hi, lo = hashing.split64_dyn(off_lo, off_hi, n)
+    idx = jnp.stack([hashing.bucket_hash(lo, hi, j, cols, key) for j in range(rows)])
+    sgn = jnp.stack([hashing.sign_hash(lo, hi, j, key) for j in range(rows)])
+    return idx, sgn
+
+
+def sketch_chunk_dyn(values: jax.Array, off_lo, off_hi, rows: int, cols: int,
+                     key: int = 0) -> jax.Array:
+    """sketch_chunk with a traced base offset (EP shards, scanned chunks)."""
+    values = values.reshape(-1).astype(jnp.float32)
+    hi, lo = hashing.split64_dyn(off_lo, off_hi, values.shape[0])
+    rows_out = []
+    for j in range(rows):
+        idx = hashing.bucket_hash(lo, hi, j, cols, key)
+        sgn = hashing.sign_hash(lo, hi, j, key)
+        rows_out.append(jnp.zeros((cols,), jnp.float32).at[idx].add(
+            sgn * values))
+    return jnp.stack(rows_out)
+
+
+def sketch_chunk_ids(values: jax.Array, hi: jax.Array, lo: jax.Array,
+                     rows: int, cols: int, key: int = 0) -> jax.Array:
+    """sketch_chunk with fully precomputed 64-bit id words (strided grids
+    from model-parallel column slices — see repro.core.model_local)."""
+    values = values.reshape(-1).astype(jnp.float32)
+    rows_out = []
+    for j in range(rows):
+        idx = hashing.bucket_hash(lo, hi, j, cols, key)
+        sgn = hashing.sign_hash(lo, hi, j, key)
+        rows_out.append(jnp.zeros((cols,), jnp.float32).at[idx].add(
+            sgn * values))
+    return jnp.stack(rows_out)
+
+
+def estimate_chunk_dyn(table: jax.Array, off_lo, off_hi, n: int, rows: int,
+                       cols: int, key: int = 0) -> jax.Array:
+    """estimate_chunk with a traced base offset (scanned unsketch)."""
+    hi, lo = hashing.split64_dyn(off_lo, off_hi, n)
+    ests = []
+    for j in range(rows):
+        idx = hashing.bucket_hash(lo, hi, j, cols, key)
+        sgn = hashing.sign_hash(lo, hi, j, key)
+        ests.append(sgn * table[j, idx])
+    return jnp.median(jnp.stack(ests), axis=0)
+
+
+@partial(jax.jit, static_argnames=("offset", "rows", "cols", "key"))
+def sketch_chunk(values: jax.Array, offset: int, rows: int, cols: int,
+                 key: int = 0) -> jax.Array:
+    """Sketch table contribution of a contiguous chunk of the flat vector.
+
+    ``values``: 1-D chunk whose element ``i`` has global id ``offset + i``.
+    Returns an ``(rows, cols)`` table; sum contributions over chunks (and
+    shards) to obtain the sketch of the full vector — linearity makes the
+    decomposition exact.
+
+    One 1-D scatter per row (rather than a single (rows, n, 2)-indexed 2-D
+    scatter): peak index memory is O(n), not O(rows * n * 2).
+    """
+    values = values.reshape(-1).astype(jnp.float32)
+    hi, lo = hashing.split64(offset, values.shape[0])
+    rows_out = []
+    for j in range(rows):
+        idx = hashing.bucket_hash(lo, hi, j, cols, key)
+        sgn = hashing.sign_hash(lo, hi, j, key)
+        rows_out.append(jnp.zeros((cols,), jnp.float32).at[idx].add(
+            sgn * values))
+    return jnp.stack(rows_out)
+
+
+def sketch_vector(values: jax.Array, rows: int, cols: int, key: int = 0,
+                  offset: int = 0) -> CountSketch:
+    """Sketch a full 1-D vector into a CountSketch."""
+    table = sketch_chunk(values.reshape(-1), offset, rows, cols, key)
+    return CountSketch(table, rows, cols, key)
+
+
+@partial(jax.jit, static_argnames=("offset", "n", "rows", "cols", "key"))
+def estimate_chunk(table: jax.Array, offset: int, n: int, rows: int,
+                   cols: int, key: int = 0) -> jax.Array:
+    """Unbiased estimates for global ids offset..offset+n (median over rows).
+
+    This is the decompression operator U(.) restricted to a contiguous id
+    range; FetchSGD runs it chunk-by-chunk to find Top-k(U(S_e)).
+    Per-row 1-D gathers keep index memory O(n).
+    """
+    hi, lo = hashing.split64(offset, n)
+    ests = []
+    for j in range(rows):
+        idx = hashing.bucket_hash(lo, hi, j, cols, key)
+        sgn = hashing.sign_hash(lo, hi, j, key)
+        ests.append(sgn * table[j, idx])
+    return jnp.median(jnp.stack(ests), axis=0)
+
+
+def estimate(cs: CountSketch, offset: int, n: int) -> jax.Array:
+    return estimate_chunk(cs.table, offset, n, cs.rows, cs.cols, cs.key)
+
+
+def hit_mask_chunk(offset: int, n: int, rows: int, cols: int, key: int,
+                   active: jax.Array) -> jax.Array:
+    """(rows, cols) boolean mask of cells touched by the ``active`` subset.
+
+    Used by the paper's practical variant (Sec. 5): instead of subtracting
+    S(Delta) from the error sketch, the cells that Delta's coordinates hash to
+    are *zeroed* ("we zero out the nonzero coordinates of S(Delta^t) in
+    S_e^t"), and momentum factor masking zeroes the same cells in S_u.
+    ``active``: boolean (n,) marking which ids in the range were extracted.
+    """
+    idx, _ = _hashes_for_range(offset, n, rows, cols, key)
+    mask = jnp.zeros((rows, cols), jnp.bool_)
+    row_ids = jnp.arange(rows, dtype=jnp.int32)[:, None]
+    return mask.at[row_ids, idx].max(active[None, :])
+
+
+def _hashes_for_ids(hi: jax.Array, lo: jax.Array, rows: int, cols: int,
+                    key: int):
+    """(idx, sgn) of shape (rows, k) for explicit 64-bit id word pairs."""
+    idx = jnp.stack([hashing.bucket_hash(lo, hi, j, cols, key)
+                     for j in range(rows)])
+    sgn = jnp.stack([hashing.sign_hash(lo, hi, j, key) for j in range(rows)])
+    return idx, sgn
+
+
+def sketch_sparse(hi: jax.Array, lo: jax.Array, values: jax.Array,
+                  rows: int, cols: int, key: int = 0) -> jax.Array:
+    """Sketch table of a k-sparse vector given id word pairs — S(Delta)."""
+    idx, sgn = _hashes_for_ids(hi, lo, rows, cols, key)
+    table = jnp.zeros((rows, cols), jnp.float32)
+    row_ids = jnp.arange(rows, dtype=jnp.int32)[:, None]
+    return table.at[row_ids, idx].add(sgn * values[None, :].astype(jnp.float32))
+
+
+def hit_mask_ids(hi: jax.Array, lo: jax.Array, rows: int, cols: int,
+                 key: int = 0) -> jax.Array:
+    """(rows, cols) bool mask of cells any of the given ids hash into."""
+    idx, _ = _hashes_for_ids(hi, lo, rows, cols, key)
+    mask = jnp.zeros((rows, cols), jnp.bool_)
+    row_ids = jnp.arange(rows, dtype=jnp.int32)[:, None]
+    return mask.at[row_ids, idx].set(True)

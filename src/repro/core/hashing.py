@@ -1,0 +1,148 @@
+"""Deterministic hash families for Count Sketch, computed on the fly.
+
+FetchSGD requires every participant (client shards, the aggregator, and any
+later decode step) to agree on the sketch's hash functions without shipping
+index tables.  Parameter counts of the assigned architectures reach 4e11
+elements (> 2**32), so element identities are 64-bit, carried as a pair of
+uint32 words ``(hi, lo)`` because jax defaults to 32-bit integer lanes on
+TPU.
+
+The family is a murmur3-style finalizer applied to the two words with
+row-specific seeds.  It is 2-universal "in practice"; the Count Sketch
+analysis only needs pairwise independence, and the finalizer's avalanche
+behaviour comfortably exceeds what the recovery tests require.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Distinct odd constants per hash role, derived from splitmix64 outputs.
+_ROW_SEEDS = np.array(
+    [0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F, 0x165667B1,
+     0xD3A2646C, 0xFD7046C5, 0xB55A4F09, 0x8F1BBCDC, 0xCA62C1D6],
+    dtype=np.uint32,
+)
+
+U32 = jnp.uint32
+
+
+def _mix(h: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 fmix32 — full avalanche on a uint32 word."""
+    h = h ^ (h >> U32(16))
+    h = h * U32(0x85EBCA6B)
+    h = h ^ (h >> U32(13))
+    h = h * U32(0xC2B2AE35)
+    h = h ^ (h >> U32(16))
+    return h
+
+
+def hash64(lo: jnp.ndarray, hi: jnp.ndarray, seed: jnp.ndarray | int) -> jnp.ndarray:
+    """Hash a 64-bit id given as two uint32 words -> uint32."""
+    seed = U32(seed) if isinstance(seed, int) else seed
+    h = _mix(lo.astype(U32) ^ seed)
+    h = _mix(h ^ hi.astype(U32) ^ (seed * U32(0x9E3779B9) + U32(1)))
+    return h
+
+
+def bucket_hash(lo: jnp.ndarray, hi: jnp.ndarray, row: int, c: int,
+                key: int = 0) -> jnp.ndarray:
+    """Bucket index in [0, c) for sketch row ``row``."""
+    seed = int(_ROW_SEEDS[row % len(_ROW_SEEDS)]) ^ (key * 0x632BE59B & 0xFFFFFFFF)
+    h = hash64(lo, hi, seed)
+    return (h % U32(c)).astype(jnp.int32)
+
+
+def sign_hash(lo: jnp.ndarray, hi: jnp.ndarray, row: int,
+              key: int = 0) -> jnp.ndarray:
+    """Rademacher sign in {-1, +1} (float32) for sketch row ``row``."""
+    seed = (int(_ROW_SEEDS[(row + 3) % len(_ROW_SEEDS)]) * 0x9E3779B9
+            ^ (key * 0x85EBCA6B)) & 0xFFFFFFFF
+    h = hash64(lo, hi, seed)
+    # top bit -> {-1., +1.}
+    return jnp.where((h >> U32(31)) == U32(0), 1.0, -1.0).astype(jnp.float32)
+
+
+def split64_dyn(lo0: jnp.ndarray, hi0: jnp.ndarray,
+                n: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(hi, lo) words for ids base..base+n-1 with a *traced* base.
+
+    ``lo0``/``hi0``: uint32 scalars (selected on-device from a static
+    offset table, e.g. by data-shard index).  ``n`` stays static.
+    """
+    i = jnp.arange(n, dtype=U32)
+    lo = lo0.astype(U32) + i
+    carry = (lo < lo0.astype(U32)).astype(U32)
+    hi = hi0.astype(U32) + carry
+    return hi, lo
+
+
+def offset_words(offsets) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Static python offsets -> (lo, hi) uint32 word arrays."""
+    lo = jnp.asarray([o & 0xFFFFFFFF for o in offsets], U32)
+    hi = jnp.asarray([o >> 32 for o in offsets], U32)
+    return lo, hi
+
+
+def mul32x32(a: jnp.ndarray, b: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Widening multiply: uint32 array x python int (< 2**31) -> (hi, lo).
+
+    Long multiplication over 16-bit halves with explicit carries — jax has
+    no u64 lanes on TPU, so 64-bit ids are assembled from u32 words.
+    """
+    a = a.astype(U32)
+    bl = U32(b & 0xFFFF)
+    bh = U32((b >> 16) & 0xFFFF)
+    al = a & U32(0xFFFF)
+    ah = a >> U32(16)
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+    mid = lh + hl
+    mid_carry = (mid < lh).astype(U32)          # overflowed 32 bits
+    lo = ll + (mid << U32(16))
+    c1 = (lo < ll).astype(U32)
+    hi = hh + (mid >> U32(16)) + (mid_carry << U32(16)) + c1
+    return hi, lo
+
+
+def ids_for_grid(base_lo, base_hi, row0, n_rows: int, row_stride: int,
+                 col0, n_cols: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(hi, lo) words for the strided id grid
+    ``base + (row0 + r) * row_stride + col0 + c`` (r < n_rows, c < n_cols).
+
+    Used by model-axis-local sketching: a tensor-parallel shard owns a
+    *column slice* of each leaf's 2-D view, so its elements' global ids
+    are row-strided rather than contiguous.  All quantities that can
+    exceed 32 bits are tracked as (hi, lo) word pairs.
+    Returns flattened (n_rows * n_cols,) arrays.
+    """
+    r = jnp.arange(n_rows, dtype=U32) + jnp.asarray(row0, U32)
+    rs_hi, rs_lo = mul32x32(r, row_stride)
+    lo_r = rs_lo + base_lo.astype(U32)
+    carry = (lo_r < rs_lo).astype(U32)
+    hi_r = rs_hi + base_hi.astype(U32) + carry
+    c = jnp.arange(n_cols, dtype=U32) + jnp.asarray(col0, U32)
+    lo = lo_r[:, None] + c[None, :]
+    carry2 = (lo < lo_r[:, None]).astype(U32)
+    hi = hi_r[:, None] + carry2
+    return hi.reshape(-1), lo.reshape(-1)
+
+
+def split64(offset: int, n: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(hi, lo) uint32 words for global element ids offset .. offset+n-1.
+
+    ``offset`` is a python int (exact), so the carry is resolved with numpy
+    int64 math before entering the traced program; only the cheap uint32
+    iota lives on device.
+    """
+    base_lo = offset & 0xFFFFFFFF
+    base_hi = offset >> 32
+    i = jnp.arange(n, dtype=U32)
+    lo = U32(base_lo) + i
+    # carry: lo wrapped iff lo < base_lo
+    carry = (lo < U32(base_lo)).astype(U32)
+    hi = U32(base_hi) + carry
+    return hi, lo

@@ -1,0 +1,260 @@
+"""Global element layout of a parameter pytree.
+
+FetchSGD treats the model as one flat d-dimensional vector: hashes are a
+function of the *global element id*, and Top-k is taken over all d
+estimates.  ``d`` reaches 4e11 for the assigned architectures, so the flat
+space is materialized only as a static *layout*: uniform **chunk groups**
+over each leaf's 2-D view ``(n_rows, row_len)``.  Uniform groups matter
+because unsketch/apply iterate chunks with ``lax.scan`` — HLO size stays
+O(groups), not O(chunks), and a 400B-parameter layout (thousands of
+chunks) compiles the same program as a 1M-parameter one.
+
+Expert-parallel leaves (MoE stacks sharded over the ``data`` mesh axis)
+get *owner-aligned* chunks: each chunk lies entirely within one shard's
+slice, carries its ``owner`` index and its row offset in the shard-local
+view, and — for the client-side sketch of the local gradient slice — a
+per-shard table of global offsets (the shard index is only known on
+device, so the offset is selected by ``lax.axis_index`` at trace time from
+a statically-precomputed table; all 64-bit math happens in Python).
+
+The layout is pure shape metadata, identical on every host/shard, so hash
+identities agree everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+# Max elements per chunk: bounds per-chunk temporaries (hash iota, estimates,
+# scatter/gather index vectors) during the scanned sketch/unsketch — the
+# (rows, chunk) estimate stack at 2**24 f32 x 5 rows is ~320 MiB per scan
+# step, which keeps the whole FetchSGD update under the activation budget
+# even for the 400B layouts (which then scan ~24k uniform chunks).
+DEFAULT_CHUNK_ELEMS = 1 << 24
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    """A contiguous row-range of one leaf's (n_rows, row_len) 2-D view."""
+
+    leaf: int
+    path: str
+    row_start: int            # in the GLOBAL 2-D view
+    n_rows: int
+    row_len: int
+    offset: int               # global element id of the first element
+    owner: int | None = None  # data shard owning this chunk (EP leaves)
+    local_row_start: int = -1 # row in the shard-LOCAL 2-D view (-1: =row_start)
+
+    @property
+    def size(self) -> int:
+        return self.n_rows * self.row_len
+
+    @property
+    def lrs(self) -> int:
+        return self.row_start if self.local_row_start < 0 else self.local_row_start
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkGroup:
+    """Chunks of identical shape over one leaf — scanned as a unit."""
+
+    leaf: int
+    path: str
+    n_rows: int
+    row_len: int
+    chunk_ids: tuple[int, ...]       # indices into layout.chunks
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalChunk:
+    """Client-side sketch chunk over the shard-LOCAL 2-D view.
+
+    ``offsets``: global element offset per data-shard index (len 1 when the
+    leaf is replicated over data — every shard sketches the same global
+    range).
+    """
+
+    leaf: int
+    row_start: int            # local view rows
+    n_rows: int
+    row_len: int
+    offsets: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return self.n_rows * self.row_len
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamLayout:
+    chunks: tuple[Chunk, ...]
+    groups: tuple[ChunkGroup, ...]
+    local_chunks: tuple[LocalChunk, ...]
+    leaf_shapes: tuple[tuple[int, ...], ...]       # PERMUTED shapes
+    leaf_local_shapes: tuple[tuple[int, ...], ...] # PERMUTED local shapes
+    leaf_perms: tuple[tuple[int, ...] | None, ...] # per-leaf view permutation
+    treedef: Any
+    total: int
+    ep: int                   # data-shard count used for EP leaves (1 = none)
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.chunks)
+
+    @property
+    def has_ep(self) -> bool:
+        return any(ch.owner is not None for ch in self.chunks)
+
+
+def _leaf_2d(shape: tuple[int, ...]) -> tuple[int, int]:
+    if len(shape) == 0:
+        return 1, 1
+    if len(shape) == 1:
+        return int(shape[0]), 1   # 1-D leaves chunk by element (rows)
+    row_len = shape[-1]
+    n_rows = int(np.prod(shape[:-1], dtype=np.int64))
+    return n_rows, row_len
+
+
+def _split_rows(n_rows: int, rows_per_chunk: int):
+    """Yield (start, n) covering n_rows in uniform pieces + remainder."""
+    r = 0
+    while r < n_rows:
+        nr = min(rows_per_chunk, n_rows - r)
+        yield r, nr
+        r += nr
+
+
+def build_layout(params: Any, *,
+                 chunk_elems: int = DEFAULT_CHUNK_ELEMS,
+                 data_shard_axis: dict[str, int] | None = None,
+                 view_perms: dict[str, tuple[int, ...]] | None = None,
+                 ep: int = 1) -> ParamLayout:
+    """Build the deterministic flat layout.
+
+    ``data_shard_axis``: leaf path -> tensor axis sharded over the data
+    mesh axis (EP leaves); ``ep`` = data axis size.
+    ``view_perms``: leaf path -> dim permutation applied before the 2-D
+    view (moves a mid-tensor model-sharded dim last so GSPMD can keep the
+    scanned view sharded; the flat id space is defined over the PERMUTED
+    order — consistent across sketch/unsketch/apply by construction).
+    Only shapes are read, so ShapeDtypeStructs work.
+    """
+    data_shard_axis = data_shard_axis or {}
+    view_perms = view_perms or {}
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    chunks: list[Chunk] = []
+    local_chunks: list[LocalChunk] = []
+    shapes, local_shapes, perms = [], [], []
+    offset = 0
+    for leaf_idx, (kp, leaf) in enumerate(leaves):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        shape = tuple(int(s) for s in leaf.shape)
+        perm = view_perms.get(path)
+        if perm is not None:
+            shape = tuple(shape[i] for i in perm)
+        perms.append(perm)
+        shapes.append(shape)
+        n_rows, row_len = _leaf_2d(shape)
+        if row_len > chunk_elems:
+            raise ValueError(f"leaf {path} row_len {row_len} > chunk_elems")
+        rows_per_chunk = max(1, chunk_elems // row_len)
+        ax = data_shard_axis.get(path)
+        if ax is not None and perm is not None:
+            ax = perm.index(ax)
+        if ax is None or ep == 1:
+            local_shapes.append(shape)
+            for r, nr in _split_rows(n_rows, rows_per_chunk):
+                chunks.append(Chunk(leaf_idx, path, r, nr, row_len,
+                                    offset + r * row_len))
+                local_chunks.append(LocalChunk(
+                    leaf_idx, r, nr, row_len, (offset + r * row_len,)))
+        else:
+            # EP leaf: axis ``ax`` sharded ep ways; owner-aligned chunks.
+            if shape[ax] % ep != 0 or ax >= len(shape) - 1:
+                raise ValueError(f"cannot EP-shard {path} axis {ax} of {shape}")
+            shard_sz = shape[ax] // ep
+            lshape = shape[:ax] + (shard_sz,) + shape[ax + 1:]
+            local_shapes.append(lshape)
+            outer = int(np.prod(shape[:ax], dtype=np.int64))
+            inner_rows = int(np.prod(shape[ax + 1:-1], dtype=np.int64)) or 1
+            block = shard_sz * inner_rows          # rows per (outer, shard)
+            for o in range(outer):
+                for r, nr in _split_rows(block, rows_per_chunk):
+                    # one logical local chunk; ep global chunks (one per owner)
+                    offs = []
+                    for s in range(ep):
+                        grow = (o * shape[ax] + s * shard_sz) * inner_rows + r
+                        offs.append(offset + grow * row_len)
+                        chunks.append(Chunk(
+                            leaf_idx, path, grow, nr, row_len,
+                            offset + grow * row_len, owner=s,
+                            local_row_start=o * block + r))
+                    local_chunks.append(LocalChunk(
+                        leaf_idx, o * block + r, nr, row_len, tuple(offs)))
+        offset += n_rows * row_len
+    # group chunks by (leaf, n_rows) for scanning
+    groups: dict[tuple[int, int], list[int]] = {}
+    for ci, ch in enumerate(chunks):
+        groups.setdefault((ch.leaf, ch.n_rows), []).append(ci)
+    group_list = tuple(
+        ChunkGroup(leaf=chunks[ids[0]].leaf, path=chunks[ids[0]].path,
+                   n_rows=nr, row_len=chunks[ids[0]].row_len,
+                   chunk_ids=tuple(ids))
+        for (leaf, nr), ids in sorted(groups.items()))
+    return ParamLayout(chunks=tuple(chunks), groups=group_list,
+                       local_chunks=tuple(local_chunks),
+                       leaf_shapes=tuple(shapes),
+                       leaf_local_shapes=tuple(local_shapes),
+                       leaf_perms=tuple(perms),
+                       treedef=treedef, total=offset, ep=ep)
+
+
+def leaf_views(params: Any, layout: ParamLayout, local: bool = False) -> list:
+    """Reshape each leaf to its (permuted) (n_rows, row_len) 2-D view."""
+    import jax.numpy as jnp
+    leaves = jax.tree_util.tree_leaves(params)
+    shapes = layout.leaf_local_shapes if local else layout.leaf_shapes
+    out = []
+    for leaf, shape, perm in zip(leaves, shapes, layout.leaf_perms):
+        if perm is not None:
+            leaf = jnp.transpose(leaf, perm)
+        n_rows, row_len = _leaf_2d(shape)
+        out.append(leaf.reshape(n_rows, row_len))
+    return out
+
+
+def unview(views: list, layout: ParamLayout, local: bool = False) -> Any:
+    import jax.numpy as jnp
+    shapes = layout.leaf_local_shapes if local else layout.leaf_shapes
+    leaves = []
+    for v, s, perm in zip(views, shapes, layout.leaf_perms):
+        leaf = v.reshape(s)
+        if perm is not None:
+            inv = tuple(np.argsort(perm))
+            leaf = jnp.transpose(leaf, inv)
+        leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def chunk_values(views: list, chunk) -> jax.Array:
+    """Flat values of a (static) chunk from the 2-D leaf views."""
+    view = views[chunk.leaf]
+    start = chunk.lrs if isinstance(chunk, Chunk) else chunk.row_start
+    return jax.lax.dynamic_slice_in_dim(view, start, chunk.n_rows,
+                                        axis=0).reshape(-1)
+
+
+def describe(layout: ParamLayout) -> str:
+    lines = [f"total elements: {layout.total:,} in {layout.num_chunks} chunks"
+             f" / {len(layout.groups)} groups (ep={layout.ep})"]
+    for g in layout.groups:
+        lines.append(f"  {g.path}: {len(g.chunk_ids)} x "
+                     f"({g.n_rows} x {g.row_len})")
+    return "\n".join(lines)

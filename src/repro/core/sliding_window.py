@@ -1,0 +1,128 @@
+"""Sliding-window error accumulation (paper Sec. 4.2 / Appendix D).
+
+Theorem 2 needs the error sketch to capture signal that is l2-heavy only in
+a sum of up to ``I`` *consecutive* gradients; vanilla error accumulation
+sums all of history, so the O(t) accumulated noise eventually drowns an
+O(I)-sized signal.  Two schemes are provided:
+
+* ``SlidingWindowSketch`` — the straightforward construction from Fig. 2 /
+  Fig. 11a: ``I`` staggered Count Sketches; sketch ``i`` is zeroed every
+  ``I`` iterations at offset ``i``.  At any time, for every ``I' <= I``
+  there is a sketch holding exactly the sum of the last ``I'`` inserts.
+  O(I) memory; used for the convergence theory and in tests.
+
+* ``LogWindowSketch`` — the smooth-histogram style variant (Braverman &
+  Ostrovsky, 2007; Fig. 11b): sketches at geometrically-spaced ages, pruned
+  so only O(log I) tables are kept; window sums are answered by the closest
+  retained suffix (a (1+eps) approximation of the window the caller asked
+  for).  This is the variant a production deployment would run.
+
+Both are linear-state pytrees and reuse the vanilla ``CountSketch`` table
+layout, so ``insert`` composes with mesh psums exactly like FetchSGD's
+single-sketch path.  (Like the paper's experiments, the default training
+path uses a single vanilla sketch; these are first-class options.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SlidingWindowSketch:
+    """I staggered (rows, cols) tables; table i is zeroed when t % I == i."""
+
+    tables: jax.Array  # (I, rows, cols)
+    t: jax.Array       # int32 — inserts performed so far
+    window: int = dataclasses.field(metadata=dict(static=True))
+
+
+def sw_init(window: int, rows: int, cols: int) -> SlidingWindowSketch:
+    return SlidingWindowSketch(
+        tables=jnp.zeros((window, rows, cols), jnp.float32),
+        t=jnp.zeros((), jnp.int32), window=window)
+
+
+def sw_insert(sw: SlidingWindowSketch, table: jax.Array) -> SlidingWindowSketch:
+    """Zero the sketch whose turn it is, then add the new sketched gradient.
+
+    Clearing BEFORE accumulating makes slot j hold inserts j..t-1 at any
+    later time t, so every suffix length 1..I is available (Fig. 2: each
+    sketch is zeroed every I iterations at its offset).
+    """
+    slot = sw.t % sw.window
+    tables = sw.tables.at[slot].set(0.0) + table[None]
+    return SlidingWindowSketch(tables=tables, t=sw.t + 1, window=sw.window)
+
+
+def sw_suffix(sw: SlidingWindowSketch, length: jax.Array) -> jax.Array:
+    """Table holding the sum of the last ``length`` inserts (length <= I).
+
+    Slot j%I is cleared right before insert j is accumulated, so after t
+    inserts it holds inserts j..t-1; the suffix of the last ``length``
+    inserts starts at t-length -> slot (t-length) % I.
+    """
+    slot = (sw.t - length) % sw.window
+    return sw.tables[slot]
+
+
+def sw_union_mask(sw: SlidingWindowSketch, threshold: jax.Array) -> jax.Array:
+    """Cells exceeding threshold in *any* suffix (FindHeavy over all I')."""
+    return jnp.any(jnp.abs(sw.tables) >= threshold, axis=0)
+
+
+def sw_subtract(sw: SlidingWindowSketch, table: jax.Array) -> SlidingWindowSketch:
+    """Update(): remove recovered coordinates from every live suffix."""
+    return dataclasses.replace(sw, tables=sw.tables - table[None])
+
+
+def sw_zero_cells(sw: SlidingWindowSketch, mask: jax.Array) -> SlidingWindowSketch:
+    """Paper's practical zeroing applied to every live suffix."""
+    return dataclasses.replace(
+        sw, tables=jnp.where(mask[None], 0.0, sw.tables))
+
+
+# -- O(log I) smooth-histogram variant ----------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LogWindowSketch:
+    """Geometric ladder of suffix sketches: level j covers ~2^j inserts.
+
+    Level j is restarted (zeroed) every 2^j inserts; a query for window I'
+    is served by the smallest level whose span covers I' — its span is at
+    most 2x the requested window, the smooth-histogram (1+eps) relaxation
+    with eps = 1.  Memory: (log2(I)+1) tables instead of I.
+    """
+
+    tables: jax.Array  # (L, rows, cols), L = log2(window)+1
+    t: jax.Array       # int32
+    window: int = dataclasses.field(metadata=dict(static=True))
+
+
+def lw_init(window: int, rows: int, cols: int) -> LogWindowSketch:
+    levels = max(1, (window - 1).bit_length() + 1)
+    return LogWindowSketch(
+        tables=jnp.zeros((levels, rows, cols), jnp.float32),
+        t=jnp.zeros((), jnp.int32), window=window)
+
+
+def lw_insert(lw: LogWindowSketch, table: jax.Array) -> LogWindowSketch:
+    tables = lw.tables + table[None]
+    t1 = lw.t + 1
+    levels = lw.tables.shape[0]
+    periods = jnp.asarray([1 << j for j in range(levels)], jnp.int32)
+    restart = (t1 % periods) == 0  # (L,)
+    tables = jnp.where(restart[:, None, None], 0.0, tables)
+    return LogWindowSketch(tables=tables, t=t1, window=lw.window)
+
+
+def lw_suffix(lw: LogWindowSketch, length: int) -> jax.Array:
+    """Smallest level whose current span is >= length (static query)."""
+    level = max(0, (length - 1).bit_length())
+    level = min(level, lw.tables.shape[0] - 1)
+    return lw.tables[level]

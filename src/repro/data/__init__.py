@@ -1,0 +1,3 @@
+"""Federated data substrate: synthetic non-i.i.d. datasets + client sampling."""
+
+from . import federated, synthetic  # noqa: F401

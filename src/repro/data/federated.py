@@ -1,0 +1,43 @@
+"""Client sampling and cohort batching for the federated simulation.
+
+Each round, ``sample_clients`` draws W clients uniformly (the paper's
+setup); ``cohort_batch`` stacks their local data into one global batch with
+a client-id vector, so the train step can compute *per-client* gradients
+(or, equivalently by sketch linearity, cohort-mean gradients per shard).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sample_clients(n_clients: int, w: int, round_idx: int,
+                   seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed * 2654435761 + round_idx)
+    return rng.choice(n_clients, size=min(w, n_clients), replace=False)
+
+
+def cohort_batch(dataset, clients, pad_to: int | None = None) -> dict:
+    """Stack the cohort's examples: {tokens, labels, client_id}.
+
+    ``pad_to`` pads the example dimension to a fixed size (repeating the
+    last example, weight-masked via ``sample_weight``) so jitted step
+    functions see a static shape regardless of cohort composition.
+    """
+    parts = [dataset.client_batch(int(c)) for c in clients]
+    toks = np.concatenate([p["tokens"] for p in parts])
+    labs = np.concatenate([p["labels"] for p in parts])
+    cid = np.concatenate([np.full(len(p["tokens"]), c, np.int32)
+                          for p, c in zip(parts, clients)])
+    weight = np.ones(len(toks), np.float32)
+    if pad_to is not None:
+        if len(toks) > pad_to:
+            toks, labs, cid, weight = (a[:pad_to] for a in
+                                       (toks, labs, cid, weight))
+        elif len(toks) < pad_to:
+            pad = pad_to - len(toks)
+            rep = lambda a: np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+            toks, labs, cid = rep(toks), rep(labs), rep(cid)
+            weight = np.concatenate([weight, np.zeros(pad, np.float32)])
+    return {"tokens": toks, "labels": labs, "client_id": cid,
+            "sample_weight": weight}

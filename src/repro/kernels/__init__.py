@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the Count Sketch hot path (+ ops dispatch, ref oracle)."""

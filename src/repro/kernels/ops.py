@@ -1,0 +1,71 @@
+"""Dispatching wrappers around the Count Sketch kernels.
+
+``sketch_encode`` / ``sketch_estimate`` pick between:
+
+* the Pallas MXU kernel (``repro.kernels.count_sketch``) — TPU target,
+  requires ``cols % 128 == 0`` and a VMEM-resident table
+  (``rows * cols * 4B <= ~8 MiB``); run with ``interpret=True`` on CPU;
+* the XLA scatter/gather path (``repro.kernels.ref``) — always available,
+  and the better choice for very wide sketches where the one-hot
+  contraction's ``B x C_o`` materialization stops paying for itself.
+
+The two paths are bit-compatible w.r.t. hash identity (same
+``repro.core.hashing`` family), so sketches built by either can be merged.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import count_sketch as pallas_cs
+from . import ref
+
+# Above this table size the (rows, C_o, 128) accumulator no longer fits VMEM
+# comfortably alongside the one-hot tiles; fall back to XLA scatter.
+_PALLAS_MAX_TABLE_BYTES = 8 * 1024 * 1024
+
+
+def _pallas_ok(rows: int, cols: int) -> bool:
+    return cols % 128 == 0 and rows * cols * 4 <= _PALLAS_MAX_TABLE_BYTES
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sketch_encode(values: jax.Array, offset: int, rows: int, cols: int,
+                  key: int = 0, *, impl: str = "auto") -> jax.Array:
+    """(rows, cols) sketch contribution of a chunk; impl in {auto,pallas,xla}."""
+    if impl == "auto":
+        impl = "pallas" if _pallas_ok(rows, cols) else "xla"
+    if impl == "pallas":
+        return pallas_cs.sketch_encode(values, offset, rows, cols, key,
+                                       interpret=_interpret())
+    return ref.sketch_encode(values, offset, rows, cols, key)
+
+
+def sketch_estimate(table: jax.Array, offset: int, n: int, key: int = 0, *,
+                    impl: str = "auto") -> jax.Array:
+    rows, cols = table.shape
+    if impl == "auto":
+        impl = "pallas" if _pallas_ok(rows, cols) else "xla"
+    if impl == "pallas":
+        return pallas_cs.sketch_estimate(table, offset, n, key,
+                                         interpret=_interpret())
+    return ref.sketch_estimate(table, offset, n, key)
+
+
+def sketch_encode_words(values: jax.Array, off_lo: jax.Array,
+                        off_hi: jax.Array, rows: int, cols: int,
+                        key: int = 0, *, impl: str = "auto") -> jax.Array:
+    """Encode with a traced 64-bit base offset (EP shards, scanned chunks)."""
+    from repro.core import count_sketch as core_cs
+    import jax.numpy as jnp
+    if impl == "auto":
+        impl = "pallas" if _pallas_ok(rows, cols) else "xla"
+    if impl == "pallas":
+        off = jnp.stack([off_lo, off_hi]).astype(jnp.uint32)
+        return pallas_cs.sketch_encode_words(values, off, rows, cols, key,
+                                             interpret=_interpret())
+    return core_cs.sketch_chunk_dyn(values, off_lo, off_hi, rows, cols, key)

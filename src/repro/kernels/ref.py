@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Count Sketch kernels.
+
+The reference semantics live in ``repro.core.count_sketch`` (scatter/gather
+formulation); this module re-exports them under the kernel API so every
+Pallas kernel has a same-signature oracle to ``assert_allclose`` against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import count_sketch as cs
+
+
+def sketch_encode(values: jax.Array, offset: int, rows: int, cols: int,
+                  key: int = 0) -> jax.Array:
+    """(rows, cols) sketch table of a 1-D chunk with global id offset."""
+    return cs.sketch_chunk(values.reshape(-1), offset, rows, cols, key)
+
+
+def sketch_estimate(table: jax.Array, offset: int, n: int,
+                    key: int = 0) -> jax.Array:
+    """Median-of-rows estimates for global ids offset..offset+n."""
+    rows, cols = table.shape
+    return cs.estimate_chunk(table, offset, n, rows, cols, key)
+
+
+def l2_estimate(table: jax.Array) -> jax.Array:
+    return jnp.median(jnp.linalg.norm(table, axis=1))

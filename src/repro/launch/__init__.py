@@ -1,0 +1,3 @@
+"""Launch layer: mesh, distributed steps, dry-run, training driver."""
+
+from . import analysis, mesh, shapes, steps  # noqa: F401

@@ -1,0 +1,197 @@
+"""Compiled-artifact analysis: roofline terms from the dry-run.
+
+This container is CPU-only; TPU v5e is the *target*.  Wall-clock MFU can't
+be measured, so the three roofline terms are derived from the compiled
+module (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory     = HLO_bytes / HBM_bw               (per chip)
+    collective = collective_bytes / ICI link bw   (per chip)
+
+``cost_analysis`` of the SPMD-partitioned executable reports the
+*per-device* program; collective bytes are not included there, so they are
+summed from the partitioned HLO text (operand sizes of all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from . import mesh as mesh_lib
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind collective bytes (result-shape sizes) in the partitioned HLO."""
+    out: dict[str, int] = {}
+    for shape_str, kind in _COLL_RE.findall(hlo_text):
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def count_collectives(hlo_text: str) -> dict:
+    counts: dict[str, int] = {}
+    for _, kind in _COLL_RE.findall(hlo_text):
+        counts[kind] = counts.get(kind, 0) + 1
+    return counts
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float               # per-device HLO FLOPs (loop bodies counted 1x)
+    hbm_bytes: float           # per-device bytes accessed
+    coll_bytes: float          # per-device collective bytes
+    coll_detail: dict
+    peak_mem_bytes: float      # per-device peak (memory_analysis)
+    model_flops: float         # 6*N_active*D (useful FLOPs, whole step)
+    step_flops: float          # analytic total step FLOPs (incl. attention,
+                               # sketch/unsketch) — trip-count-aware
+    n_devices: int
+
+    # NOTE on the compute term: XLA's cost_analysis counts while-loop bodies
+    # ONCE, so a scan-over-layers program under-reports FLOPs by ~n_units.
+    # The compute term therefore uses the analytic, trip-count-aware
+    # ``step_flops``; raw ``flops`` is retained as a lower-bound cross-check.
+    @property
+    def t_compute(self) -> float:
+        return (self.step_flops / self.n_devices) / mesh_lib.PEAK_FLOPS_BF16
+
+    @property
+    def t_compute_hlo(self) -> float:
+        return self.flops / mesh_lib.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / mesh_lib.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / mesh_lib.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.step_flops if self.step_flops else 0.0
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} "
+                f"| {self.t_compute*1e3:.2f} | {self.t_memory*1e3:.2f} "
+                f"| {self.t_collective*1e3:.2f} | {self.bottleneck} "
+                f"| {self.useful_ratio:.3f} "
+                f"| {self.peak_mem_bytes/2**30:.2f} |")
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
+            n_devices: int, model_flops: float,
+            step_flops: float) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    peak = (ma.temp_size_in_bytes + ma.argument_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=float(coll.get("total", 0)),
+        coll_detail=coll,
+        peak_mem_bytes=float(peak),
+        model_flops=model_flops,
+        step_flops=step_flops,
+        n_devices=n_devices,
+    )
+
+
+def model_flops_estimate(cfg, shape, n_active_params: float) -> float:
+    """MODEL_FLOPS = 6 * N_active * D(tokens) for train; 2*N*D for inference."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active_params * tokens
+
+
+def step_flops_estimate(cfg, shape, n_active_params: float,
+                        fs_cfg=None, layout_total: int | None = None) -> float:
+    """Analytic whole-step FLOPs, trip-count aware.
+
+    matmul term (2*N_active per token, x3 for backward) + quadratic/windowed
+    attention term + FetchSGD overhead (hash+scatter per element for the
+    sketch, hash+gather+median for the unsketch; ~r*c_hash ops/element
+    counted as 8 flop-equivalents per row).
+    """
+    B = shape.global_batch
+    S = shape.seq_len
+    is_train = shape.kind == "train"
+    tokens = B * (S if shape.kind != "decode" else 1)
+    mult = 6.0 if is_train else 2.0
+    total = mult * n_active_params * tokens
+
+    # attention: per layer, q@k + p@v = 4 * B * H * Sq * Sk_eff * hd
+    n_attn = sum(1 for s in cfg.unit_pattern if s.kind == "attn") \
+        * cfg.n_units + cfg.enc_layers
+    H, hd = cfg.n_heads, cfg.hd
+    win = cfg.sliding_window
+    if shape.kind == "decode":
+        sq, sk = 1, min(S, win) if win else S
+    else:
+        sq = S
+        sk = min(S, win) if win else S
+        sk = sk / 2 if not win else sk          # causal halves the band
+    attn = 4.0 * B * H * sq * sk * hd * n_attn
+    total += attn * (3.0 if is_train else 1.0)
+
+    # FetchSGD sketch + unsketch: ~8 integer-op-equivalents per row-hash
+    if is_train and fs_cfg is not None and layout_total:
+        total += 2.0 * 8 * fs_cfg.rows * layout_total   # encode + decode
+    return total
+
+
+def active_params(cfg, param_count: int) -> float:
+    """Active (per-token) parameter count for MoE archs; else total."""
+    if cfg.n_experts:
+        # subtract inactive expert fraction from the expert stacks
+        ffe = cfg.moe_d_ff or cfg.d_ff
+        n_moe_layers = sum(1 for s in cfg.unit_pattern if s.moe) * cfg.n_units
+        expert_params = n_moe_layers * cfg.n_experts * 3 * cfg.d_model * ffe
+        active_expert = expert_params * cfg.expert_top_k / cfg.n_experts
+        return param_count - expert_params + active_expert
+    return float(param_count)

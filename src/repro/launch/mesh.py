@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import, and smoke tests/benches must keep seeing the real single device.
+
+Target hardware: TPU v5e pods, 16x16 = 256 chips per pod; the multi-pod
+mesh adds a leading ``pod`` axis (2 pods = 512 chips).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (host) devices exist — tests only."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"debug mesh {data}x{model} needs {data*model} "
+                         f"devices, have {n}")
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e per-chip constants used by the roofline report (see EXPERIMENTS.md)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

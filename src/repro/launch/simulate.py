@@ -1,0 +1,234 @@
+"""Single-host federated simulation — the engine behind the paper's figures.
+
+Runs any of the paper's methods (FetchSGD, local top-k, FedAvg,
+uncompressed, true top-k) over the synthetic non-i.i.d. federated datasets
+and reports loss history + upload/download compression.  This is the
+CPU-scale counterpart of the mesh train step in ``steps.py`` — same
+optimizer code (repro.core / repro.baselines), different scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import fedavg, local_topk, uncompressed
+from repro.core import compression, fetchsgd as F
+from repro.core import layout as layout_lib
+from repro.core import topk as TK
+from repro.data import federated, synthetic
+from repro.models import transformer
+from repro.optim import triangular
+
+
+@dataclasses.dataclass
+class SimResult:
+    method: str
+    losses: list
+    traffic: dict
+    extras: dict
+
+
+def _grad_fn(cfg):
+    @jax.jit
+    def gf(params, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: transformer.loss_fn(p, batch, cfg, remat=False),
+            has_aux=True)(params)
+        return loss, grads
+    return gf
+
+
+def _client_batches(dataset, clients, pad_to):
+    return [dataset.client_batch(int(c)) for c in clients]
+
+
+def _to_jnp(b):
+    return {k: jnp.asarray(v) for k, v in b.items()
+            if k in ("tokens", "labels")}
+
+
+def micro_cfg(name: str = "gpt2s-federated"):
+    """Micro variant for CPU-speed convergence runs (tests/benches):
+    2 layers, d=64, vocab=128 — compiles in seconds, converges in ~10
+    rounds on the class-shard task."""
+    from repro import configs
+    from repro.models.config import reduce_for_smoke
+    return reduce_for_smoke(
+        configs.get_config(name), name=name + "-micro", d_model=64,
+        n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128, vocab=128,
+        attn_chunk=32, loss_chunk=32)
+
+
+def micro_dataset(cfg, seed: int = 0):
+    from repro.data import synthetic
+    return synthetic.ClassShardLM(vocab=cfg.vocab, seq_len=16, n_classes=4,
+                                  n_clients=64, samples_per_client=4,
+                                  seed=seed)
+
+
+def run_simulation(cfg, *, method: str = "fetchsgd", rounds: int = 30,
+                   clients_per_round: int = 4, peak_lr: float = 0.2,
+                   fs_cfg: F.FetchSGDConfig | None = None,
+                   topk_cfg: local_topk.LocalTopKConfig | None = None,
+                   fa_cfg: fedavg.FedAvgConfig | None = None,
+                   dataset=None, seed: int = 0,
+                   eval_every: int = 1) -> SimResult:
+    dataset = dataset or synthetic.ClassShardLM(
+        vocab=cfg.vocab, seq_len=32, n_classes=8, n_clients=256,
+        samples_per_client=4, seed=seed)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    lay = layout_lib.build_layout(params)
+    d = lay.total
+    gf = _grad_fn(cfg)
+    lr_fn = triangular(peak_lr, rounds)
+    meter = compression.TrafficMeter(d=d)
+    losses, extras = [], {}
+
+    if method == "fetchsgd":
+        fs_cfg = fs_cfg or F.FetchSGDConfig(rows=5, cols=1 << 14, k=512,
+                                            momentum=0.9)
+        st = F.init_state(fs_cfg)
+        sketch_j = jax.jit(lambda g: F.sketch_grads(g, lay, fs_cfg))
+        server_j = jax.jit(
+            lambda t, st, lr: F.server_step(t, st, lr, lay, fs_cfg))
+        apply_j = jax.jit(lambda p, d: F.apply_delta(p, lay, d))
+        for r in range(rounds):
+            clients = federated.sample_clients(dataset.n_clients,
+                                               clients_per_round, r, seed)
+            # linearity: mean of client sketches == sketch of mean gradient
+            tables, loss_acc = [], 0.0
+            for cb in _client_batches(dataset, clients, None):
+                loss, grads = gf(params, _to_jnp(cb))
+                tables.append(sketch_j(grads))
+                loss_acc += float(loss)
+            agg = sum(tables) / len(tables)
+            delta, st = server_j(agg, st, lr_fn(r))
+            params = apply_j(params, delta)
+            losses.append(loss_acc / len(tables))
+            meter.record(compression.fetchsgd_round(fs_cfg.rows, fs_cfg.cols,
+                                                    fs_cfg.k),
+                         clients_per_round)
+        extras["fs_cfg"] = fs_cfg
+
+    elif method == "true_topk":
+        # Appendix A.3 Fig. 10: full gradients to the server; server keeps a
+        # dense error accumulator and applies only the top-k each round.
+        fs_cfg = fs_cfg or F.FetchSGDConfig(k=512, momentum=0.9)
+        err = jax.tree.map(jnp.zeros_like, params)
+        mom = jax.tree.map(jnp.zeros_like, params)
+        for r in range(rounds):
+            clients = federated.sample_clients(dataset.n_clients,
+                                               clients_per_round, r, seed)
+            gs, loss_acc = None, 0.0
+            for cb in _client_batches(dataset, clients, None):
+                loss, grads = gf(params, _to_jnp(cb))
+                gs = grads if gs is None else jax.tree.map(
+                    jnp.add, gs, grads)
+                loss_acc += float(loss)
+            gs = jax.tree.map(lambda x: x / clients_per_round, gs)
+            mom, err, params = _true_topk_jit(lay, fs_cfg)(
+                mom, err, params, gs, lr_fn(r))
+            losses.append(loss_acc / clients_per_round)
+            meter.record(compression.RoundTraffic(upload=d * 4,
+                                                  download=fs_cfg.k * 8),
+                         clients_per_round)
+
+    elif method == "local_topk":
+        topk_cfg = topk_cfg or local_topk.LocalTopKConfig(k=512)
+        st = local_topk.init_server_state(params, topk_cfg)
+        compress_j = jax.jit(lambda g, lr: local_topk.client_compress(
+            g, None, lr, lay, topk_cfg)[0])
+        apply_j = None
+        for r in range(rounds):
+            clients = federated.sample_clients(dataset.n_clients,
+                                               clients_per_round, r, seed)
+            deltas, loss_acc = [], 0.0
+            for cb in _client_batches(dataset, clients, None):
+                loss, grads = gf(params, _to_jnp(cb))
+                deltas.append(compress_j(grads, lr_fn(r)))
+                loss_acc += float(loss)
+            if apply_j is None:
+                apply_j = jax.jit(lambda p, ds, s: local_topk.server_apply(
+                    p, ds, s, lay, topk_cfg))
+            params, st = apply_j(params, deltas, st)
+            losses.append(loss_acc / len(deltas))
+            union = len(np.unique(np.concatenate(
+                [np.asarray(dd.chunk_id) * (2 ** 26)
+                 + np.asarray(dd.local_idx) for dd in deltas])))
+            meter.record(compression.local_topk_round(topk_cfg.k, union),
+                         clients_per_round)
+
+    elif method == "fedavg":
+        fa_cfg = fa_cfg or fedavg.FedAvgConfig(local_epochs=2)
+        st = fedavg.init_server_state(params, fa_cfg)
+
+        def gf_batch(p, b):
+            return gf(p, b)[1]
+
+        for r in range(rounds):
+            clients = federated.sample_clients(dataset.n_clients,
+                                               clients_per_round, r, seed)
+            deltas, weights, loss_acc = [], [], 0.0
+            for cb in _client_batches(dataset, clients, None):
+                jb = _to_jnp(cb)
+                loss, _ = gf(params, jb)
+                loss_acc += float(loss)
+                reps = {k: jnp.stack([v] * fa_cfg.local_epochs)
+                        for k, v in jb.items()}
+                deltas.append(fedavg.client_update(params, reps, lr_fn(r),
+                                                   gf_batch, fa_cfg))
+                weights.append(len(cb["tokens"]))
+            params, st = fedavg.server_apply(params, deltas, weights, st,
+                                             fa_cfg)
+            losses.append(loss_acc / len(deltas))
+            meter.record(compression.fedavg_round(d), clients_per_round)
+
+    elif method == "uncompressed":
+        ucfg = uncompressed.SGDConfig(momentum=0.9)
+        st = uncompressed.init_state(params, ucfg)
+        for r in range(rounds):
+            clients = federated.sample_clients(dataset.n_clients,
+                                               clients_per_round, r, seed)
+            gs, loss_acc = None, 0.0
+            for cb in _client_batches(dataset, clients, None):
+                loss, grads = gf(params, _to_jnp(cb))
+                gs = grads if gs is None else jax.tree.map(jnp.add, gs, grads)
+                loss_acc += float(loss)
+            gs = jax.tree.map(lambda x: x / clients_per_round, gs)
+            params, st = uncompressed.step(params, gs, st, lr_fn(r), ucfg)
+            losses.append(loss_acc / clients_per_round)
+            meter.record(compression.uncompressed_round(d), clients_per_round)
+    else:
+        raise ValueError(method)
+
+    return SimResult(method=method, losses=losses,
+                     traffic=meter.compression(clients_per_round),
+                     extras=extras)
+
+
+def SparseOnes(delta: TK.SparseDelta) -> TK.SparseDelta:
+    return TK.SparseDelta(chunk_id=delta.chunk_id, local_idx=delta.local_idx,
+                          values=jnp.ones_like(delta.values), k=delta.k)
+
+
+@functools.lru_cache(maxsize=8)
+def _true_topk_jit(lay, fs_cfg):
+    @jax.jit
+    def f(mom, err, params, gs, lr):
+        mom = jax.tree.map(lambda m, g: fs_cfg.momentum * m + g, mom, gs)
+        acc = jax.tree.map(lambda e, m: e + lr * m, err, mom)
+        delta = TK.topk_dense(layout_lib.leaf_views(acc, lay), lay, fs_cfg.k)
+        params = TK.apply_delta(params, lay, delta)
+        err = TK.apply_delta(acc, lay, delta)   # acc - extracted
+        # momentum factor masking on the dense momentum
+        mask = TK.apply_delta(jax.tree.map(jnp.zeros_like, acc), lay,
+                              SparseOnes(delta), scale=-1.0)
+        mom = jax.tree.map(lambda m, ms: m * (1 - ms), mom, mask)
+        return mom, err, params
+    return f

@@ -1,0 +1,102 @@
+"""Mesh training driver: FetchSGD on the distributed step builders.
+
+On real hardware this runs the production mesh; in this container it runs
+a debug mesh over forced host devices, exercising the same shard_map path
+as the dry-run.  (For laptop-scale experiments use
+``examples/train_federated_lm.py`` — same optimizer, no mesh.)
+
+    python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --debug-mesh 4x2 --rounds 5
+"""
+
+import os
+
+if "--debug-mesh" in str(os.sys.argv):
+    _n = 1
+    for _p in os.sys.argv[os.sys.argv.index("--debug-mesh") + 1].split("x"):
+        _n *= int(_p)
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count={_n}"
+                               ).strip()
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import fetchsgd as F
+from repro.data import synthetic
+from repro.launch import mesh as mesh_lib, shapes, steps
+from repro.models import transformer
+from repro.optim import triangular
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b",
+                    choices=configs.list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--debug-mesh", default=None,
+                    help="e.g. 4x2 = (data=4, model=2) host-device mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--cols", type=int, default=1 << 14)
+    ap.add_argument("--k", type=int, default=512)
+    ap.add_argument("--aggregate", default="sketch",
+                    choices=("sketch", "dense"))
+    args = ap.parse_args()
+
+    if args.debug_mesh:
+        parts = [int(p) for p in args.debug_mesh.split("x")]
+        mesh = jax.make_mesh(tuple(parts),
+                             ("data", "model") if len(parts) == 2
+                             else ("pod", "data", "model"))
+    else:
+        mesh = mesh_lib.make_production_mesh(multi_pod=args.multi_pod)
+
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    shape = shapes.ShapeSpec("train", "train", args.seq_len,
+                             args.global_batch)
+    fs = F.FetchSGDConfig(rows=5, cols=args.cols, k=args.k, momentum=0.9)
+    bundle = steps.make_train_step(cfg, shape, mesh, fs,
+                                   aggregate=args.aggregate)
+
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    opt = F.init_state(fs)
+    ds = synthetic.ClassShardLM(vocab=cfg.vocab, seq_len=args.seq_len,
+                                n_clients=256,
+                                samples_per_client=args.global_batch)
+    lr_fn = triangular(args.lr, args.rounds)
+    print(f"mesh {dict(mesh.shape)}  arch {cfg.name}  "
+          f"d={transformer.param_count(params)/1e6:.1f}M  "
+          f"aggregate={args.aggregate}")
+    with mesh:
+        for r in range(args.rounds):
+            cb = ds.client_batch(r % 256)
+            batch = {"tokens": jnp.asarray(cb["tokens"][:args.global_batch]),
+                     "labels": jnp.asarray(cb["labels"][:args.global_batch])}
+            if cfg.frontend == "vision":
+                batch["patches"] = jnp.zeros(
+                    (args.global_batch, cfg.n_patches, cfg.d_model))
+            if cfg.is_encdec:
+                batch["frames"] = jnp.zeros(
+                    (args.global_batch, cfg.enc_seq, cfg.d_model))
+            t0 = time.time()
+            params, opt, m = bundle.fn(params, opt, batch,
+                                       jnp.float32(lr_fn(r)))
+            print(f"round {r}: loss {float(m['loss']):.4f} "
+                  f"({time.time()-t0:.1f}s)")
+    assert np.isfinite(float(m["loss"]))
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: shared layers + per-arch assembly via unit patterns."""
+
+from . import (attention, config, layers, moe, sharding, ssm, transformer,
+               xlstm)  # noqa: F401
+from .config import ArchConfig, LayerSpec  # noqa: F401
+from .transformer import (decode_step, init_cache, init_params, loss_fn,
+                          param_count, prefill)  # noqa: F401

@@ -1,0 +1,225 @@
+"""GQA attention: RoPE, qk-norm, sliding window, chunked softmax, KV cache.
+
+One implementation serves every attention-bearing arch in the zoo:
+
+* **GQA** — ``n_kv_heads <= n_heads`` with grouped query heads.
+* **RoPE** (rotary embeddings) with configurable theta; whisper disables it
+  (learned positional embeddings are added at the embedding stage instead).
+* **qk-norm** (qwen3): RMS-normalize q and k per head before RoPE.
+* **Chunked (flash-style) softmax** — queries are processed in blocks of
+  ``cfg.attn_chunk`` via ``lax.map``, so peak score memory is
+  ``O(chunk * S_k)`` per head instead of ``O(S_q * S_k)``; required for the
+  32k-prefill shapes.
+* **Sliding window** — band mask during train/prefill; *ring-buffer* KV
+  cache during decode, so the cache is O(window) — this is what lets dense
+  archs run the ``long_500k`` shape (see DESIGN.md §Arch-applicability).
+* **KV cache** stores the absolute position of every slot (``pos_arr``), so
+  full and ring-buffer caches share one masking rule: a slot is visible iff
+  ``0 <= slot_pos <= q_pos`` (and within the window, if any).
+* **Cross-attention** (whisper decoder): keys/values from the encoder, no
+  causal mask, cached once per request at serve time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ArchConfig
+
+NEG_INF = -1e30
+
+
+# -- rotary embeddings -----------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (S,) or (B, S) absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, :, None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- params ----------------------------------------------------------------------
+
+def attn_init(key, cfg: ArchConfig, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": layers.normal(ks[0], (d, H, hd), d ** -0.5, dt),
+        "wk": layers.normal(ks[1], (d, KV, hd), d ** -0.5, dt),
+        "wv": layers.normal(ks[2], (d, KV, hd), d ** -0.5, dt),
+        "wo": layers.normal(ks[3], (H, hd, d), (H * hd) ** -0.5, dt),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = layers.rmsnorm_init(hd, dt)
+        p["k_norm"] = layers.rmsnorm_init(hd, dt)
+    return p
+
+
+# -- cache -----------------------------------------------------------------------
+
+def cache_init(cfg: ArchConfig, batch: int, capacity: int, n_units: int,
+               members: int, dtype=jnp.bfloat16) -> dict:
+    """Stacked KV cache for all attention members of all units.
+
+    ``pos_arr`` holds the absolute position written into each slot (-1 =
+    empty); ``pos`` is the number of tokens generated so far.
+    """
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    shape = (n_units, members, batch, capacity, KV, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos_arr": jnp.full((n_units, members, capacity), -1, jnp.int32),
+    }
+
+
+# -- core attention --------------------------------------------------------------
+
+def _attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int, chunk: int,
+            compute_dtype="float32"):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd), q_pos: (B,Sq), k_pos: (B,Sk).
+
+    Chunked over Sq; GQA group expansion happens inside each block.
+    Invalid slots carry k_pos < 0 and are always masked.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    # compute_dtype="bfloat16" keeps K/V in their storage dtype (bf16
+    # cache): the MXU accumulates in f32 via preferred_element_type, so
+    # casting the whole cache to f32 (2x decode HBM traffic + a
+    # cache-sized temp) is never needed.  "float32" is the conservative
+    # baseline recorded in EXPERIMENTS.md §Roofline.
+    cdt = jnp.dtype(compute_dtype)
+    kf = k.astype(cdt)
+    vf = v.astype(cdt)
+
+    chunk = min(chunk, Sq)
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_blocks = q.shape[1] // chunk
+    qb = q.reshape(B, n_blocks, chunk, H, hd).swapaxes(0, 1)
+    qpb = q_pos.reshape(B, n_blocks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def block(args):
+        # checkpointed: attention backward recomputes each block's scores,
+        # so lax.map never stacks the (n_blocks, ..., chunk, S_k) softmax —
+        # the flash-attention memory profile, expressed structurally.
+        qc, qp = args                                   # (B,c,H,hd), (B,c)
+        qc = qc.astype(cdt).reshape(B, chunk, KV, G, hd)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kf,
+                       preferred_element_type=jnp.float32) * scale
+        ok = k_pos[:, None, :] >= 0                     # (B,1,Sk) valid slot
+        if causal:
+            ok &= k_pos[:, None, :] <= qp[:, :, None]
+        if window:
+            ok &= k_pos[:, None, :] > qp[:, :, None] - window
+        s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(cdt)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p, vf,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, chunk, H, hd)
+
+    out = jax.lax.map(block, (qb, qpb))                 # (n_blocks,B,c,H,hd)
+    out = out.swapaxes(0, 1).reshape(B, n_blocks * chunk, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def _qkv(p, x, cfg: ArchConfig, positions, use_rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm and "q_norm" in p:
+        q = layers.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p, x, cfg: ArchConfig, positions, *, causal=True,
+                 window=0, use_rope=True) -> jax.Array:
+    """Train / prefill self-attention over the full (possibly banded) seq."""
+    B, S, _ = x.shape
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None], (B, S))
+    q, k, v = _qkv(p, x, cfg, positions, use_rope)
+    o = _attend(q, k, v, positions, positions, causal=causal, window=window,
+                chunk=cfg.attn_chunk, compute_dtype=cfg.attn_compute_dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attn_decode(p, x, cfg: ArchConfig, cache_k, cache_v, pos_arr, pos, *,
+                window=0, use_rope=True):
+    """Single-token decode against a (possibly ring-buffer) KV cache.
+
+    x: (B, 1, d).  Returns (out, new_k, new_v, new_pos_arr); caller advances
+    ``pos``.  Slot = pos % capacity (a ring when window > 0 sized the cache
+    at the window; an append when capacity = max seq).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, positions, use_rope)
+    cap = cache_k.shape[1]
+    slot = pos % cap
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), slot, axis=1)
+    parr = jax.lax.dynamic_update_slice_in_dim(
+        pos_arr, jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    k_pos = jnp.broadcast_to(parr[None], (B, cap))
+    o = _attend(q, ck, cv, positions, k_pos, causal=True, window=window,
+                chunk=cfg.attn_chunk, compute_dtype=cfg.attn_compute_dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, ck, cv, parr
+
+
+def attn_prefill(p, x, cfg: ArchConfig, cache_k, cache_v, pos_arr, *,
+                 window=0, use_rope=True):
+    """Prefill: full forward AND populate the cache (first S slots)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    q, k, v = _qkv(p, x, cfg, positions, use_rope)
+    o = _attend(q, k, v, positions, positions, causal=True, window=window,
+                chunk=cfg.attn_chunk, compute_dtype=cfg.attn_compute_dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    cap = cache_k.shape[1]
+    n = min(S, cap)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k[:, S - n:].astype(cache_k.dtype), 0, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v[:, S - n:].astype(cache_v.dtype), 0, axis=1)
+    parr = jax.lax.dynamic_update_slice_in_dim(
+        pos_arr, jnp.arange(S - n, S, dtype=jnp.int32), 0, axis=0)
+    return out, ck, cv, parr
+
+
+def cross_attn_forward(p, x, enc_out, cfg: ArchConfig) -> jax.Array:
+    """Whisper-style cross attention (no mask, no rope)."""
+    B, S, _ = x.shape
+    Sk = enc_out.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    q_pos = jnp.zeros((B, S), jnp.int32)
+    k_pos = jnp.zeros((B, Sk), jnp.int32)
+    o = _attend(q, k, v, q_pos, k_pos, causal=False, window=0,
+                chunk=cfg.attn_chunk, compute_dtype=cfg.attn_compute_dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])

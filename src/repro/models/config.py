@@ -1,0 +1,127 @@
+"""Architecture configuration shared by the whole model zoo.
+
+A model is a repeating *unit* of layers (``unit_pattern``), scanned
+``n_units`` times — this keeps HLO size bounded for 48-layer giants and
+makes parameter stacks natural to shard.  Heterogeneous architectures
+(jamba's 1:7 mamba:attention interleave, llama4's dense/MoE alternation,
+xLSTM's mLSTM/sLSTM mix) are expressed purely through the pattern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str          # attn | mamba | mlstm | slstm
+    moe: bool = False  # MoE FFN instead of dense FFN ("" = no FFN at all)
+    ffn: bool = True   # has an FFN sub-block (xLSTM blocks have none)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str             # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    unit_pattern: tuple[LayerSpec, ...] = (LayerSpec("attn"),)
+    head_dim: int = 0          # 0 -> d_model // n_heads
+    act: str = "swiglu"        # swiglu | gelu
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    expert_top_k: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # SSM (mamba)
+    ssm_d_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0       # 0 -> d_model // 16
+    ssm_remat: bool = False    # checkpoint the chunked selective scan
+                               # (recompute intra-chunk states in backward)
+    # xLSTM
+    xlstm_proj_factor: float = 2.0
+    # encoder-decoder (whisper): encoder is attn-only, bidirectional
+    enc_layers: int = 0
+    enc_seq: int = 1500        # whisper frame count (stub frontend output)
+    # multimodal stub frontends
+    frontend: str = "none"     # none | audio | vision
+    n_patches: int = 0         # vision prefix length (pixtral)
+    # attention variant
+    sliding_window: int = 0    # 0 = full attention; >0 = window size
+    # numerics / sharding
+    param_dtype: str = "float32"
+    attn_compute_dtype: str = "float32"   # "bfloat16": MXU-native QK/PV with
+                                          # f32 accumulation (§Perf variant)
+    shard_experts_data: bool = False   # ZeRO-style expert sharding over data
+    attn_chunk: int = 512      # query-block size for chunked attention
+    loss_chunk: int = 512      # sequence-block size for chunked xent
+
+    def __post_init__(self):
+        if self.n_layers % len(self.unit_pattern) != 0:
+            raise ValueError(
+                f"{self.name}: n_layers {self.n_layers} not divisible by "
+                f"unit length {len(self.unit_pattern)}")
+
+    @property
+    def n_units(self) -> int:
+        return self.n_layers // len(self.unit_pattern)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.enc_layers > 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or max(1, self.d_model // 16)
+
+
+def reduce_for_smoke(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """Reduced variant of the same family: <=2 units, d_model<=512, <=4 experts."""
+    unit = cfg.unit_pattern
+    d_model = min(cfg.d_model, 256)
+    n_heads = min(cfg.n_heads, 4)
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    changes = dict(
+        name=cfg.name + "-smoke",
+        n_layers=len(unit) * min(2, cfg.n_units),
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=d_model // n_heads,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab=min(cfg.vocab, 512),
+        n_experts=min(cfg.n_experts, 4),
+        n_shared_experts=min(cfg.n_shared_experts, 1),
+        expert_top_k=min(cfg.expert_top_k, 2),
+        moe_d_ff=min(cfg.moe_d_ff, 256) if cfg.moe_d_ff else 0,
+        enc_layers=min(cfg.enc_layers, 2),
+        enc_seq=min(cfg.enc_seq, 64),
+        n_patches=min(cfg.n_patches, 16),
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        attn_chunk=64,
+        loss_chunk=64,
+        param_dtype="float32",
+        shard_experts_data=False,
+    )
+    changes.update(overrides)
+    return dataclasses.replace(cfg, **changes)

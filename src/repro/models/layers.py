@@ -1,0 +1,103 @@
+"""Shared neural-net primitives (functional: params are plain dict pytrees)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# -- norms ---------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# -- embedding / unembedding ----------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": normal(key, (vocab, d), 0.02, dtype)}
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return p["table"][tokens]
+
+
+def unembed_init(key, d: int, vocab: int, dtype) -> dict:
+    return {"w": normal(key, (d, vocab), d ** -0.5, dtype)}
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["w"]
+
+
+# -- MLP -------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": normal(k1, (d, d_ff), d ** -0.5, dtype),
+         "w_down": normal(k2, (d_ff, d), d_ff ** -0.5, dtype)}
+    if act == "swiglu":
+        p["w_gate"] = normal(k3, (d, d_ff), d ** -0.5, dtype)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    up = x @ p["w_up"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(f"unknown act {act}")
+    return h @ p["w_down"]
+
+
+# -- chunked cross-entropy -------------------------------------------------------
+
+def xent_loss(unembed_p: dict, h: jax.Array, labels: jax.Array,
+              chunk: int) -> jax.Array:
+    """Mean next-token cross entropy, chunked over the sequence axis.
+
+    Avoids materializing the full (B, S, V) logit tensor — at vocab 202k and
+    seq 4k that would dominate activation memory.  ``h``: (B, S, d) final
+    hidden states; ``labels``: (B, S) int32.
+    """
+    B, S, _ = h.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = h.shape[1] // chunk
+    h = h.reshape(B, n_chunks, chunk, -1).swapaxes(0, 1)
+    labels = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def per_chunk(args):
+        # checkpointed: backward recomputes each chunk's logits instead of
+        # lax.map stacking (n_chunks, B, chunk, V) activations for the vjp.
+        hc, lc = args
+        logits = unembed(unembed_p, hc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * valid), jnp.sum(valid)
+
+    losses, counts = jax.lax.map(per_chunk, (h, labels))
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)

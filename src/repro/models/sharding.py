@@ -1,0 +1,281 @@
+"""Sharding rules: param/batch/cache PartitionSpecs for the production mesh.
+
+Policy (DESIGN.md §4):
+
+* tensor-parallel over ``model``: attention heads, FFN width, expert FFN
+  width, SSM inner width, vocab;
+* data-parallel over ``(pod, data)``: the batch;
+* ZeRO-style expert sharding over ``data`` for the MoE giants
+  (``cfg.shard_experts_data``) — expert stacks dominate their parameter
+  memory (llama4: 386B of 400B);
+* every rule is divisibility-guarded: if a dim doesn't divide the mesh
+  axis, the next candidate dim is tried (e.g. glm4's kv=2 heads cannot
+  shard over model=16, so K/V shard over head_dim=128 instead), else the
+  leaf replicates.  This is what makes all 10 architectures lower on the
+  same mesh without per-arch special cases.
+
+Unit-stacked leaves carry a leading (n_units,) dim — rules key on leaf
+*names*, so the stack dim is skipped positionally.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ArchConfig
+
+# Activation-sharding context (set by the launch layer): constrains the
+# residual stream's d_model dim over `model`, so the scan-saved backward
+# activations (n_units, B, S, d) are 1/model_size per chip — without it the
+# 400B configs blow past HBM on saved carries alone.
+_ACT_SHARDING: list = [None]
+
+
+@contextlib.contextmanager
+def activation_sharding(sharding_or_none):
+    _ACT_SHARDING.append(sharding_or_none)
+    try:
+        yield
+    finally:
+        _ACT_SHARDING.pop()
+
+
+def constrain_activations(x):
+    s = _ACT_SHARDING[-1]
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def _axsize(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _div(n: int, mesh: Mesh, ax: str) -> bool:
+    return n % _axsize(mesh, ax) == 0 and _axsize(mesh, ax) > 1
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _batch_size(mesh: Mesh) -> int:
+    n = 1
+    for ax in batch_axes(mesh):
+        n *= _axsize(mesh, ax)
+    return n
+
+
+def param_spec(path: str, shape: tuple[int, ...], cfg: ArchConfig,
+               mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, keyed by its path."""
+    name = path.split("/")[-1]
+    stacked = path.startswith("units/") or path.startswith("enc/units/")
+    lead = (None,) if stacked else ()
+    nd = len(shape) - len(lead)
+
+    def spec(*axes):
+        axes = axes[:nd] + (None,) * (nd - len(axes))
+        return P(*(lead + axes))
+
+    moe_e = ("data" if cfg.shard_experts_data
+             and _div(cfg.n_experts, mesh, "data") else None)
+
+    if name == "table":                                   # embed (V, d)
+        return spec("model" if _div(shape[-2], mesh, "model") else None, None)
+    if path.endswith("unembed/w"):                        # (d, V)
+        return spec(None, "model" if _div(shape[-1], mesh, "model") else None)
+    if name == "frontend_proj":
+        return spec(None, "model" if _div(shape[-1], mesh, "model") else None)
+    if name in ("wq", "wk", "wv") and nd == 3:            # (d, H, hd)
+        if _div(shape[-2], mesh, "model"):
+            return spec(None, "model", None)
+        if name in ("wk", "wv") and cfg.qk_norm:
+            # qk-norm reduces over head_dim: sharding hd forces an SPMD
+            # full-rematerialization reshard every layer; replicate instead.
+            return spec()
+        if _div(shape[-1], mesh, "model"):
+            return spec(None, None, "model")
+        return spec()
+    if name == "wo" and nd == 3:                          # (H, hd, d)
+        if _div(shape[-3], mesh, "model"):
+            return spec("model", None, None)
+        if _div(shape[-2], mesh, "model"):
+            return spec(None, "model", None)
+        return spec()
+    if "/moe/" in path and "/shared/" not in path:
+        if name == "router":
+            return spec()
+        if name in ("w_gate", "w_up"):                    # (E, d, ffe)
+            return spec(moe_e, None,
+                        "model" if _div(shape[-1], mesh, "model") else None)
+        if name == "w_down":                              # (E, ffe, d)
+            return spec(moe_e,
+                        "model" if _div(shape[-2], mesh, "model") else None,
+                        None)
+    if name in ("w_gate", "w_up"):                        # dense mlp (d, ff)
+        return spec(None, "model" if _div(shape[-1], mesh, "model") else None)
+    if name == "w_down":                                  # (ff, d)
+        return spec("model" if _div(shape[-2], mesh, "model") else None, None)
+    if "/mamba/" in path:
+        di = cfg.d_inner
+        if name == "in_proj":                             # (d, 2*di)
+            return spec(None, "model" if _div(di, mesh, "model") else None)
+        if name == "conv_w":                              # (K, di)
+            return spec(None, "model" if _div(di, mesh, "model") else None)
+        if name in ("conv_b", "dt_bias", "D"):            # (di,)
+            return spec("model" if _div(di, mesh, "model") else None)
+        if name in ("x_proj", "A_log", "out_proj"):       # (di, *)
+            return spec("model" if _div(di, mesh, "model") else None, None)
+        if name == "dt_proj":                             # (dr, di)
+            return spec(None, "model" if _div(di, mesh, "model") else None)
+    if "/mlstm/" in path:
+        if name in ("up", "wq", "wk", "wv"):              # (*, k*di)
+            return spec(None, "model" if _div(shape[-1], mesh, "model") else None)
+        if name in ("down", "w_if"):                      # (di, *)
+            return spec("model" if _div(shape[-2], mesh, "model") else None,
+                        None)
+        return spec()
+    if "/slstm/" in path:                                 # small; replicate
+        return spec()
+    return spec()  # norms, biases, scalars
+
+
+def layout_view_plan(params: Any, cfg: ArchConfig, mesh: Mesh):
+    """(view_perms, view_shardings) for FetchSGD's scanned 2-D leaf views.
+
+    The FetchSGD sketch/apply paths scan each leaf's 2-D view; without an
+    explicit sharding constraint GSPMD fixes the scan carry replicated and
+    the big leaves blow past HBM.  The auto ('model') sharding of a leaf
+    maps onto the 2-D view directly when the sharded dim is trailing
+    (-> P(None, 'model')) or the leading dim of a 2-D leaf
+    (-> P('model', None)); for mid-tensor shardings (w_down's ffe, wo's
+    heads) the layout *permutes* the view so the sharded dim lands last --
+    the flat hash space is simply defined over the permuted order.
+    """
+    perms: dict[str, tuple[int, ...]] = {}
+    shardings: list = []
+    modes: list = []        # model-local sketch mode per leaf (PERMUTED view)
+    model_specs: list = []  # model-axis-only PartitionSpec per leaf
+
+    def visit(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        nd = len(leaf.shape)
+        spec = param_spec(path, tuple(leaf.shape), cfg, mesh)
+        entries = list(spec) + [None] * (nd - len(spec))
+        model_dims = [i for i, e in enumerate(entries) if e == "model"]
+        model_specs.append(P(*("model" if e == "model" else None
+                               for e in entries)))
+        if not model_dims:
+            shardings.append(None)
+            modes.append(None)
+        elif model_dims[0] == nd - 1:
+            shardings.append(NamedSharding(mesh, P(None, "model")))
+            modes.append("cols")
+        elif nd == 2 and model_dims[0] == 0:
+            shardings.append(NamedSharding(mesh, P("model", None)))
+            modes.append("rows")
+        else:
+            m = model_dims[0]
+            perms[path] = tuple(i for i in range(nd) if i != m) + (m,)
+            shardings.append(NamedSharding(mesh, P(None, "model")))
+            modes.append("cols")
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return perms, shardings, modes, model_specs
+
+
+def params_sharding(params: Any, cfg: ArchConfig, mesh: Mesh):
+    """NamedSharding tree matching the parameter pytree."""
+
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        return NamedSharding(mesh, param_spec(path, tuple(leaf.shape), cfg,
+                                              mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# -- batch / cache ---------------------------------------------------------------
+
+def batch_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Batch-leading arrays: shard batch over (pod, data) when divisible."""
+    axes = batch_axes(mesh)
+    if shape and shape[0] % _batch_size(mesh) == 0 and shape[0] > 1:
+        return P(axes, *(None,) * (len(shape) - 1))
+    return P(*(None,) * len(shape))
+
+
+def batch_sharding(batch: Any, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(tuple(leaf.shape), mesh)),
+        batch)
+
+
+def cache_spec(path: str, shape: tuple[int, ...], cfg: ArchConfig,
+               mesh: Mesh) -> P:
+    """KV/state caches: (U, M, B, ...) stacked arrays.
+
+    Preference order per array kind; every choice divisibility-guarded:
+      attn k/v:    batch over (pod,data) -> kv-heads over model,
+                   else capacity over data (long-context B=1),
+                   else head_dim over model;
+      mamba/xlstm: batch over (pod,data), inner width over model.
+    """
+    name = path.split("/")[-1]
+    daxes = batch_axes(mesh)
+    nb = _batch_size(mesh)
+
+    if name in ("pos", "pos_arr"):
+        return P()          # positions replicate (pos_arr has no batch dim)
+    dims: list = [None] * len(shape)
+    if len(shape) >= 3:
+        if shape[2] % nb == 0 and shape[2] > 1:
+            dims[2] = daxes
+    if "attn/" in path and name in ("k", "v"):
+        # (U, M, B, cap, KV, hd)
+        if _div(shape[4], mesh, "model"):
+            dims[4] = "model"
+        elif _div(shape[5], mesh, "model"):
+            dims[5] = "model"
+        # NOTE: capacity is deliberately NOT sharded over data — the step
+        # bodies are manual over data, and a sharded ring buffer would
+        # change attention semantics inside shard_map.
+    elif "xattn/" in path:
+        # (U, M, B, enc_seq, KV, hd)
+        if _div(shape[4], mesh, "model"):
+            dims[4] = "model"
+        elif _div(shape[5], mesh, "model"):
+            dims[5] = "model"
+    elif "mamba/" in path:
+        # conv (U,M,B,K-1,di) | ssm (U,M,B,di,ds)
+        ax = 4 if name == "conv" else 3
+        if _div(shape[ax], mesh, "model"):
+            dims[ax] = "model"
+    elif "mlstm/" in path:
+        # C (U,M,B,H,dh,dh) | n (U,M,B,H,dh)
+        if _div(shape[3], mesh, "model"):
+            dims[3] = "model"
+        elif _div(shape[4], mesh, "model"):
+            dims[4] = "model"
+    elif "slstm/" in path:
+        if _div(shape[-1], mesh, "model"):
+            dims[-1] = "model"
+    return P(*dims)
+
+
+def cache_sharding(cache: Any, cfg: ArchConfig, mesh: Mesh):
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        return NamedSharding(mesh, cache_spec(path, tuple(leaf.shape), cfg,
+                                              mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,200 @@
+"""Mamba selective-state-space block (jamba's recurrent member).
+
+Selective scan ``h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t`` with
+input-dependent (dt, B, C).  Train/prefill runs a **chunked associative
+scan**: sequential ``lax.scan`` over time-chunks carrying the (B, d_inner,
+d_state) state, parallel ``associative_scan`` within each chunk — peak
+memory is O(chunk * d_inner * d_state) instead of O(S * ...), which is
+what makes the 524k-token shape feasible.  Decode is the O(1) recurrent
+update (this is why SSM archs run ``long_500k`` natively).
+
+TPU note: the scan state (B, d_inner, d_state) shards over ``model`` on
+d_inner — the recurrence is elementwise in d_inner, so the shard_map/GSPMD
+partition introduces no cross-shard traffic inside the scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ArchConfig
+
+SSM_CHUNK = 128
+
+
+def mamba_init(key, cfg: ArchConfig) -> dict:
+    d, di, ds, dr = cfg.d_model, cfg.d_inner, cfg.ssm_d_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "in_proj": layers.normal(ks[0], (d, 2 * di), d ** -0.5, dt),
+        "conv_w": layers.normal(ks[1], (cfg.ssm_conv, di), 0.5, dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": layers.normal(ks[2], (di, dr + 2 * ds), di ** -0.5, dt),
+        "dt_proj": layers.normal(ks[3], (dr, di), dr ** -0.5, dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),   # softplus^-1(~0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds)).copy()).astype(dt),
+        "D": jnp.ones((di,), dt),
+        "out_proj": layers.normal(ks[4], (di, d), di ** -0.5, dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv over S via shifted adds. x: (B,S,di), w: (K,di)."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for j in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[K - 1 - j]
+    return out + b
+
+
+def _sel_params(p, x_conv, cfg: ArchConfig):
+    """(dt, Bm, Cm) selective params from the conv output. x_conv: (B,S,di)."""
+    dr, ds = cfg.dt_rank, cfg.ssm_d_state
+    dbc = x_conv @ p["x_proj"]
+    dt_in, Bm, Cm = jnp.split(dbc, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])   # (B,S,di)
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _scan_chunked(dt, Bm, Cm, xin, A, h0, remat: bool = False):
+    """Chunked selective scan.
+
+    dt, xin: (B,S,di); Bm, Cm: (B,S,ds); A: (di,ds); h0: (B,di,ds).
+    Returns (y (B,S,di) float32, h_final).  ``remat``: checkpoint each
+    chunk so the backward pass recomputes the intra-chunk associative-scan
+    states instead of saving the (chunk, B, di, ds) stacks.
+    """
+    B, S, di = xin.shape
+    ds = A.shape[1]
+    chunk = min(SSM_CHUNK, S)
+    pad = (-S) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        dt, Bm, Cm, xin = z(dt), z(Bm), z(Cm), z(xin)
+    n = dt.shape[1] // chunk
+    resh = lambda a: a.reshape(B, n, chunk, *a.shape[2:]).swapaxes(0, 1)
+    dtc, Bc, Cc, xc = resh(dt), resh(Bm), resh(Cm), resh(xin)
+
+    def chunk_step(h, args):
+        dt_k, B_k, C_k, x_k = args          # (B,chunk,...)
+        dtf = dt_k.astype(jnp.float32)
+        decay = jnp.exp(dtf[..., None] * (-jnp.exp(A))[None, None])  # (B,c,di,ds)
+        drive = (dtf * x_k.astype(jnp.float32))[..., None] * B_k[:, :, None, :]
+
+        def combine(a, b):
+            return (a[0] * b[0], a[1] * b[0] + b[1])
+
+        dec_c, drv_c = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+        h_all = dec_c * h[:, None] + drv_c                            # (B,c,di,ds)
+        y = jnp.einsum("bcds,bcs->bcd", h_all, C_k)
+        return h_all[:, -1], y
+
+    if remat:
+        chunk_step = jax.checkpoint(chunk_step)
+    h_final, ys = jax.lax.scan(chunk_step, h0, (dtc, Bc, Cc, xc))
+    y = ys.swapaxes(0, 1).reshape(B, n * chunk, di)[:, :S]
+    return y, h_final
+
+
+def _scan_chunked_fused(p, xc, A, h0, cfg):
+    """ssm_remat=True path: the selective params (dt, B, C) are recomputed
+    *inside* each checkpointed chunk from the conv output, so the scan's
+    saved xs are just the (n, B, chunk, di) conv activations — the
+    (B, S, di) dt tensor and state stacks never materialize for backward.
+    """
+    B, S, di = xc.shape
+    chunk = min(SSM_CHUNK, S)
+    pad = (-S) % chunk
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    n = xc.shape[1] // chunk
+    xcc = xc.reshape(B, n, chunk, di).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_step(h, x_k):
+        dt_k, B_k, C_k = _sel_params(p, x_k, cfg)
+        dtf = dt_k.astype(jnp.float32)
+        decay = jnp.exp(dtf[..., None] * (-jnp.exp(A))[None, None])
+        drive = (dtf * x_k.astype(jnp.float32))[..., None] * B_k[:, :, None, :]
+
+        def combine(a, b):
+            return (a[0] * b[0], a[1] * b[0] + b[1])
+
+        dec_c, drv_c = jax.lax.associative_scan(combine, (decay, drive),
+                                                axis=1)
+        h_all = dec_c * h[:, None] + drv_c
+        y = jnp.einsum("bcds,bcs->bcd", h_all, C_k)
+        return h_all[:, -1], y
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, xcc)
+    y = ys.swapaxes(0, 1).reshape(B, n * chunk, di)[:, :S]
+    return y, h_final
+
+
+def mamba_forward(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Full-sequence mamba block. x: (B, S, d)."""
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, [di], axis=-1)
+    xc = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    A = p["A_log"].astype(jnp.float32)
+    h0 = jnp.zeros((x.shape[0], di, cfg.ssm_d_state), jnp.float32)
+    if cfg.ssm_remat:
+        y, _ = _scan_chunked_fused(p, xc, A, h0, cfg)
+    else:
+        dt, Bm, Cm = _sel_params(p, xc, cfg)
+        y, _ = _scan_chunked(dt, Bm, Cm, xc, A, h0)
+    y = y.astype(x.dtype) + xc * p["D"]
+    return (y * jax.nn.silu(z)) @ p["out_proj"]
+
+
+def mamba_cache_init(cfg: ArchConfig, batch: int, n_units: int, members: int,
+                     dtype=jnp.float32) -> dict:
+    di = cfg.d_inner
+    return {
+        "conv": jnp.zeros((n_units, members, batch, cfg.ssm_conv - 1, di), dtype),
+        "ssm": jnp.zeros((n_units, members, batch, di, cfg.ssm_d_state),
+                         jnp.float32),
+    }
+
+
+def mamba_decode(p: dict, x: jax.Array, conv_state, ssm_state,
+                 cfg: ArchConfig):
+    """Single-token recurrent update. x: (B,1,d). States: (B,K-1,di), (B,di,ds)."""
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, [di], axis=-1)          # (B,1,di)
+    window = jnp.concatenate([conv_state, xin], axis=1)      # (B,K,di)
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)[:, None]                             # (B,1,di)
+    dt, Bm, Cm = _sel_params(p, xc, cfg)
+    A = p["A_log"].astype(jnp.float32)
+    dtf = dt[:, 0].astype(jnp.float32)                        # (B,di)
+    decay = jnp.exp(dtf[..., None] * (-jnp.exp(A))[None])     # (B,di,ds)
+    drive = (dtf * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = decay * ssm_state + drive
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0])[:, None].astype(x.dtype)
+    y = y + xc * p["D"]
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, window[:, 1:], h
+
+
+def mamba_prefill(p: dict, x: jax.Array, cfg: ArchConfig):
+    """Forward AND final recurrent states for subsequent decode."""
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, [di], axis=-1)
+    xc = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    dt, Bm, Cm = _sel_params(p, xc, cfg)
+    A = p["A_log"].astype(jnp.float32)
+    h0 = jnp.zeros((x.shape[0], di, cfg.ssm_d_state), jnp.float32)
+    y, h_final = _scan_chunked(dt, Bm, Cm, xc, A, h0, remat=cfg.ssm_remat)
+    y = y.astype(x.dtype) + xc * p["D"]
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    conv_state = xin[:, -(cfg.ssm_conv - 1):]
+    return out, conv_state, h_final

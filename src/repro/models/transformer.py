@@ -1,0 +1,442 @@
+"""Model assembly: units -> scan -> train / prefill / decode entry points.
+
+Every assigned architecture is a stack of ``n_units`` repeating units
+(``cfg.unit_pattern``) scanned with ``lax.scan`` — parameters and caches
+carry a leading ``(n_units, ...)`` stack dim, keeping HLO size independent
+of depth (a 48-layer 400B MoE compiles the same program as a 2-layer smoke
+variant).
+
+Entry points (these are what the launch layer lowers for the shape matrix):
+
+* ``loss_fn``      — next-token xent + MoE aux (train_4k)
+* ``prefill``      — forward + cache population (prefill_32k)
+* ``decode_step``  — one token against the cache (decode_32k, long_500k)
+
+Multimodal stubs per the assignment: ``audio`` (whisper) consumes
+precomputed mel/conv *frame embeddings*; ``vision`` (pixtral) consumes
+precomputed *patch embeddings* — both pass through a learned projector and
+join the token stream (prefix fusion).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, moe, ssm, xlstm
+from .config import ArchConfig, LayerSpec
+
+
+# -- helpers ---------------------------------------------------------------------
+
+def _kind_member_index(cfg: ArchConfig) -> dict:
+    """member position -> index within its cache kind (static)."""
+    counters: dict[str, int] = {}
+    out = {}
+    for i, spec in enumerate(cfg.unit_pattern):
+        out[i] = counters.get(spec.kind, 0)
+        counters[spec.kind] = out[i] + 1
+    return out
+
+
+def _kind_counts(cfg: ArchConfig) -> dict:
+    counts: dict[str, int] = {}
+    for spec in cfg.unit_pattern:
+        counts[spec.kind] = counts.get(spec.kind, 0) + 1
+    return counts
+
+
+def _sinusoid(seq: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- init ------------------------------------------------------------------------
+
+def _member_init(key, spec: LayerSpec, cfg: ArchConfig, decoder: bool) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    p: dict = {"norm1": layers.rmsnorm_init(d, dt)}
+    if spec.kind == "attn":
+        p["attn"] = attention.attn_init(ks[0], cfg)
+        if decoder and cfg.is_encdec:
+            p["xnorm"] = layers.rmsnorm_init(d, dt)
+            p["xattn"] = attention.attn_init(ks[1], cfg, cross=True)
+    elif spec.kind == "mamba":
+        p["mamba"] = ssm.mamba_init(ks[0], cfg)
+    elif spec.kind == "mlstm":
+        p["mlstm"] = xlstm.mlstm_init(ks[0], cfg)
+    elif spec.kind == "slstm":
+        p["slstm"] = xlstm.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.ffn:
+        p["norm2"] = layers.rmsnorm_init(d, dt)
+        if spec.moe:
+            p["moe"] = moe.moe_init(ks[2], cfg)
+        else:
+            p["mlp"] = layers.mlp_init(ks[2], d, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def _stack_init(key, cfg: ArchConfig, n_units: int, decoder: bool) -> dict:
+    """Init unit params with a leading (n_units,) stack dim via vmap."""
+    members = {}
+    for i, spec in enumerate(cfg.unit_pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), n_units)
+        members[f"m{i}"] = jax.vmap(
+            lambda k: _member_init(k, spec, cfg, decoder))(keys)
+    return members
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    params = {
+        "embed": layers.embedding_init(ks[0], cfg.vocab, cfg.d_model, dt),
+        "units": _stack_init(ks[1], cfg, cfg.n_units, decoder=True),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.unembed_init(ks[2], cfg.d_model, cfg.vocab, dt)
+    if cfg.is_encdec:
+        enc_cfg = cfg  # same dims; attn-only units with dense FFN
+        enc_pattern = (LayerSpec("attn"),)
+        enc_units = cfg.enc_layers
+        import dataclasses as _dc
+        enc_cfg = _dc.replace(cfg, unit_pattern=enc_pattern,
+                              n_layers=enc_units, qk_norm=False)
+        params["enc"] = {
+            "units": _stack_init(ks[3], enc_cfg, enc_units, decoder=False),
+            "final_norm": layers.rmsnorm_init(cfg.d_model, dt),
+        }
+    if cfg.frontend in ("audio", "vision"):
+        params["frontend_proj"] = layers.normal(
+            ks[4], (cfg.d_model, cfg.d_model), cfg.d_model ** -0.5, dt)
+    return params
+
+
+# -- unit application --------------------------------------------------------------
+
+def _apply_unit_train(x, unit_p, cfg: ArchConfig, positions, enc_out,
+                      window: int):
+    """One unit, full-sequence mode. Returns (x, aux)."""
+    aux = 0.0
+    for i, spec in enumerate(cfg.unit_pattern):
+        mp = unit_p[f"m{i}"]
+        h = layers.rmsnorm(mp["norm1"], x, cfg.norm_eps)
+        if spec.kind == "attn":
+            h = attention.attn_forward(mp["attn"], h, cfg, positions,
+                                       causal=True, window=window)
+            x = x + h
+            if "xattn" in mp:
+                hx = layers.rmsnorm(mp["xnorm"], x, cfg.norm_eps)
+                x = x + attention.cross_attn_forward(mp["xattn"], hx, enc_out,
+                                                     cfg)
+        elif spec.kind == "mamba":
+            x = x + ssm.mamba_forward(mp["mamba"], h, cfg)
+        elif spec.kind == "mlstm":
+            x = x + xlstm.mlstm_forward(mp["mlstm"], h, cfg)
+        elif spec.kind == "slstm":
+            x = x + xlstm.slstm_forward(mp["slstm"], h, cfg)
+        if spec.ffn:
+            h2 = layers.rmsnorm(mp["norm2"], x, cfg.norm_eps)
+            if spec.moe:
+                y, a = moe.moe_apply(mp["moe"], h2, cfg)
+                aux = aux + a
+            else:
+                y = layers.mlp(mp["mlp"], h2, cfg.act)
+            x = x + y
+    return x, aux
+
+
+def _backbone_train(params, x, cfg: ArchConfig, positions, enc_out,
+                    remat: bool):
+    window = cfg.sliding_window
+    from . import sharding as sharding_lib
+
+    def body(carry, unit_p):
+        x, aux = carry
+        # carry the residual stream in bf16 (and model-sharded when the
+        # launch layer sets the activation constraint): the scan-saved
+        # backward activations are (n_units, B, S, d) — the dominant
+        # training memory term for the deep configs.
+        x = sharding_lib.constrain_activations(x)
+        x, a = _apply_unit_train(x, unit_p, cfg, positions, enc_out, window)
+        x = sharding_lib.constrain_activations(x.astype(jnp.bfloat16))
+        return (x, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x.astype(jnp.bfloat16), 0.0),
+                               params["units"])
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def _encoder(params, frames, cfg: ArchConfig):
+    """Whisper encoder: frame embeddings (stub frontend) -> contextual enc_out."""
+    x = frames @ params["frontend_proj"]
+    x = x + _sinusoid(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    enc = params["enc"]
+
+    def body(x, unit_p):
+        mp = unit_p["m0"]
+        h = layers.rmsnorm(mp["norm1"], x, cfg.norm_eps)
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        h = attention.attn_forward(mp["attn"], h, cfg, pos, causal=False,
+                                   use_rope=False)
+        x = x + h
+        h2 = layers.rmsnorm(mp["norm2"], x, cfg.norm_eps)
+        x = x + layers.mlp(mp["mlp"], h2, cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, enc["units"])
+    return layers.rmsnorm(enc["final_norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(params, batch, cfg: ArchConfig):
+    """Token/patch fusion -> (x, positions, enc_out)."""
+    tokens = batch["tokens"]
+    x = layers.embed(params["embed"], tokens)
+    enc_out = None
+    if cfg.frontend == "vision":
+        patches = batch["patches"] @ params["frontend_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    if cfg.is_encdec:
+        enc_out = _encoder(params, batch["frames"], cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    return x, positions, enc_out
+
+
+def loss_fn(params, batch, cfg: ArchConfig, remat: bool = True):
+    """Mean next-token cross-entropy (+ MoE aux). The train_4k entry point."""
+    x, positions, enc_out = _embed_inputs(params, batch, cfg)
+    h, aux = _backbone_train(params, x, cfg, positions, enc_out, remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":   # no loss on the patch prefix
+        h = h[:, -labels.shape[1]:]
+    un = params.get("unembed") or {"w": params["embed"]["table"].T}
+    loss = layers.xent_loss(un, h, labels, cfg.loss_chunk)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+# -- caches ------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Decode cache sized for ``seq_len`` context (ring if sliding window)."""
+    counts = _kind_counts(cfg)
+    n_units = cfg.n_units
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if "attn" in counts:
+        cap = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+        cache["attn"] = attention.cache_init(cfg, batch, cap, n_units,
+                                             counts["attn"], dtype)
+    if "mamba" in counts:
+        cache["mamba"] = ssm.mamba_cache_init(cfg, batch, n_units,
+                                              counts["mamba"])
+    if "mlstm" in counts:
+        H, di = cfg.n_heads, int(cfg.d_model * cfg.xlstm_proj_factor)
+        dh = di // H
+        m = counts["mlstm"]
+        cache["mlstm"] = {
+            "C": jnp.zeros((n_units, m, batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((n_units, m, batch, H, dh), jnp.float32),
+        }
+    if "slstm" in counts:
+        H = cfg.n_heads
+        dh = cfg.d_model // H
+        m = counts["slstm"]
+        z = jnp.zeros((n_units, m, batch, H, dh), jnp.float32)
+        cache["slstm"] = {"h": z, "c": z, "n": z, "m": z - 1e9}
+    if cfg.is_encdec:
+        cache["xattn"] = {
+            "k": jnp.zeros((n_units, counts["attn"], batch, cfg.enc_seq,
+                            cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((n_units, counts["attn"], batch, cfg.enc_seq,
+                            cfg.n_kv_heads, cfg.hd), dtype),
+        }
+    return cache
+
+
+# -- prefill -----------------------------------------------------------------------
+
+def prefill(params, batch, cfg: ArchConfig, cache: dict):
+    """Forward over the prompt, populating every member's cache.
+
+    Returns (last-position logits, cache).  This is the prefill_32k entry
+    point; for SSM members the "cache" is the O(1) recurrent state.
+    """
+    x, positions, enc_out = _embed_inputs(params, batch, cfg)
+    kmi = _kind_member_index(cfg)
+    window = cfg.sliding_window
+
+    def body(x, xs):
+        unit_p, cache_u = xs
+        new_cache = dict(cache_u)
+        for i, spec in enumerate(cfg.unit_pattern):
+            mp = unit_p[f"m{i}"]
+            mi = kmi[i]
+            h = layers.rmsnorm(mp["norm1"], x, cfg.norm_eps)
+            if spec.kind == "attn":
+                ca = new_cache["attn"]
+                out, ck, cv, parr = attention.attn_prefill(
+                    mp["attn"], h, cfg, ca["k"][mi], ca["v"][mi],
+                    ca["pos_arr"][mi], window=window)
+                new_cache["attn"] = {
+                    "k": ca["k"].at[mi].set(ck),
+                    "v": ca["v"].at[mi].set(cv),
+                    "pos_arr": ca["pos_arr"].at[mi].set(parr)}
+                x = x + out
+                if "xattn" in mp:
+                    hx = layers.rmsnorm(mp["xnorm"], x, cfg.norm_eps)
+                    x = x + attention.cross_attn_forward(mp["xattn"], hx,
+                                                         enc_out, cfg)
+                    xk = jnp.einsum("bsd,dhk->bshk", enc_out,
+                                    mp["xattn"]["wk"])
+                    xv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                                    mp["xattn"]["wv"])
+                    cx = new_cache["xattn"]
+                    new_cache["xattn"] = {
+                        "k": cx["k"].at[mi].set(xk.astype(cx["k"].dtype)),
+                        "v": cx["v"].at[mi].set(xv.astype(cx["v"].dtype))}
+            elif spec.kind == "mamba":
+                out, conv_s, ssm_s = ssm.mamba_prefill(mp["mamba"], h, cfg)
+                cm = new_cache["mamba"]
+                new_cache["mamba"] = {
+                    "conv": cm["conv"].at[mi].set(
+                        conv_s.astype(cm["conv"].dtype)),
+                    "ssm": cm["ssm"].at[mi].set(ssm_s)}
+                x = x + out
+            elif spec.kind == "mlstm":
+                out, (C_f, n_f) = xlstm.mlstm_forward(
+                    mp["mlstm"], h, cfg, return_state=True)
+                cm = new_cache["mlstm"]
+                new_cache["mlstm"] = {"C": cm["C"].at[mi].set(C_f),
+                                      "n": cm["n"].at[mi].set(n_f)}
+                x = x + out
+            elif spec.kind == "slstm":
+                out, st = xlstm.slstm_forward(mp["slstm"], h, cfg,
+                                              return_state=True)
+                cm = new_cache["slstm"]
+                new_cache["slstm"] = {
+                    "h": cm["h"].at[mi].set(st[0]),
+                    "c": cm["c"].at[mi].set(st[1]),
+                    "n": cm["n"].at[mi].set(st[2]),
+                    "m": cm["m"].at[mi].set(st[3])}
+                x = x + out
+            if spec.ffn:
+                h2 = layers.rmsnorm(mp["norm2"], x, cfg.norm_eps)
+                if spec.moe:
+                    y, _ = moe.moe_apply(mp["moe"], h2, cfg)
+                else:
+                    y = layers.mlp(mp["mlp"], h2, cfg.act)
+                x = x + y
+        return x, new_cache
+
+    per_unit_cache = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_cache = jax.lax.scan(body, x, (params["units"], per_unit_cache))
+    new_cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+    h = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    un = params.get("unembed") or {"w": params["embed"]["table"].T}
+    logits = layers.unembed(un, h)[:, 0]
+    return logits, new_cache
+
+
+# -- decode ------------------------------------------------------------------------
+
+def decode_step(params, tokens, cfg: ArchConfig, cache: dict):
+    """One-token decode. tokens: (B, 1). Returns (logits (B, V), cache)."""
+    x = layers.embed(params["embed"], tokens)
+    pos = cache["pos"]
+    kmi = _kind_member_index(cfg)
+    window = cfg.sliding_window
+
+    def body(x, xs):
+        unit_p, cache_u = xs
+        new_cache = dict(cache_u)
+        for i, spec in enumerate(cfg.unit_pattern):
+            mp = unit_p[f"m{i}"]
+            mi = kmi[i]
+            h = layers.rmsnorm(mp["norm1"], x, cfg.norm_eps)
+            if spec.kind == "attn":
+                ca = new_cache["attn"]
+                out, ck, cv, parr = attention.attn_decode(
+                    mp["attn"], h, cfg, ca["k"][mi], ca["v"][mi],
+                    ca["pos_arr"][mi], pos, window=window)
+                new_cache["attn"] = {
+                    "k": ca["k"].at[mi].set(ck),
+                    "v": ca["v"].at[mi].set(cv),
+                    "pos_arr": ca["pos_arr"].at[mi].set(parr)}
+                x = x + out
+                if "xattn" in mp:
+                    hx = layers.rmsnorm(mp["xnorm"], x, cfg.norm_eps)
+                    cx = new_cache["xattn"]
+                    x = x + _cross_decode(mp["xattn"], hx, cx["k"][mi],
+                                          cx["v"][mi], cfg)
+            elif spec.kind == "mamba":
+                cm = new_cache["mamba"]
+                out, conv_s, ssm_s = ssm.mamba_decode(
+                    mp["mamba"], h, cm["conv"][mi].astype(h.dtype),
+                    cm["ssm"][mi], cfg)
+                new_cache["mamba"] = {
+                    "conv": cm["conv"].at[mi].set(
+                        conv_s.astype(cm["conv"].dtype)),
+                    "ssm": cm["ssm"].at[mi].set(ssm_s)}
+                x = x + out
+            elif spec.kind == "mlstm":
+                cm = new_cache["mlstm"]
+                out, C_f, n_f = xlstm.mlstm_decode(mp["mlstm"], h,
+                                                   cm["C"][mi], cm["n"][mi],
+                                                   cfg)
+                new_cache["mlstm"] = {"C": cm["C"].at[mi].set(C_f),
+                                      "n": cm["n"].at[mi].set(n_f)}
+                x = x + out
+            elif spec.kind == "slstm":
+                cm = new_cache["slstm"]
+                st = (cm["h"][mi], cm["c"][mi], cm["n"][mi], cm["m"][mi])
+                out, st = xlstm.slstm_decode(mp["slstm"], h, st, cfg)
+                new_cache["slstm"] = {
+                    "h": cm["h"].at[mi].set(st[0]),
+                    "c": cm["c"].at[mi].set(st[1]),
+                    "n": cm["n"].at[mi].set(st[2]),
+                    "m": cm["m"].at[mi].set(st[3])}
+                x = x + out
+            if spec.ffn:
+                h2 = layers.rmsnorm(mp["norm2"], x, cfg.norm_eps)
+                if spec.moe:
+                    y, _ = moe.moe_apply(mp["moe"], h2, cfg)
+                else:
+                    y = layers.mlp(mp["mlp"], h2, cfg.act)
+                x = x + y
+        return x, new_cache
+
+    per_unit_cache = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_cache = jax.lax.scan(body, x, (params["units"], per_unit_cache))
+    new_cache["pos"] = pos + 1
+    h = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    un = params.get("unembed") or {"w": params["embed"]["table"].T}
+    logits = layers.unembed(un, h)[:, 0]
+    return logits, new_cache
+
+
+def _cross_decode(p, x, xk, xv, cfg: ArchConfig):
+    """Cross-attention at decode using the prefill-cached encoder K/V."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_pos = jnp.zeros((B, S), jnp.int32)
+    k_pos = jnp.zeros((B, xk.shape[1]), jnp.int32)
+    o = attention._attend(q, xk.astype(q.dtype), xv.astype(q.dtype), q_pos,
+                          k_pos, causal=False, window=0, chunk=cfg.attn_chunk,
+                          compute_dtype=cfg.attn_compute_dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

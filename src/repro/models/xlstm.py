@@ -1,0 +1,212 @@
+"""xLSTM blocks: chunkwise mLSTM (matrix memory) + sequential sLSTM.
+
+* **mLSTM** — matrix memory ``C_t = f_t C_{t-1} + i_t k_t v_t^T`` with a
+  normalizer ``n_t = f_t n_{t-1} + i_t k_t``; queries read
+  ``y_t = C_t q_t / max(|n_t . q_t|, 1)``.  The recurrence has no
+  state-to-gate dependency, so it parallelizes: we run a chunkwise form
+  (intra-chunk decay-weighted attention + inter-chunk state carry), the
+  same scan structure as the mamba block.  Gates are sigmoid with
+  log-space cumulative decays; the exponential-gate max-stabilizer of the
+  paper is unnecessary under sigmoid gates (decays <= 1) and is omitted —
+  recorded as a deviation in DESIGN.md.
+* **sLSTM** — scalar memory with exponential gating, normalizer ``n`` and
+  stabilizer ``m`` states, and a block-diagonal (per-head) recurrent
+  matrix.  The gate depends on ``h_{t-1}``, so it is inherently sequential:
+  one ``lax.scan`` over time.  Decode is the same update applied once.
+
+Both blocks live inside a pre-norm residual with a 2x up-projection
+(``xlstm_proj_factor``); xLSTM has no separate FFN (``d_ff = 0``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ArchConfig
+
+MLSTM_CHUNK = 128
+
+
+def _di(cfg: ArchConfig) -> int:
+    return int(cfg.d_model * cfg.xlstm_proj_factor)
+
+
+# ---------------------------------------------------------------- mLSTM ------
+
+def mlstm_init(key, cfg: ArchConfig) -> dict:
+    d, di, H = cfg.d_model, _di(cfg), cfg.n_heads
+    ks = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "up": layers.normal(ks[0], (d, 2 * di), d ** -0.5, dt),
+        "wq": layers.normal(ks[1], (di, di), di ** -0.5, dt),
+        "wk": layers.normal(ks[2], (di, di), di ** -0.5, dt),
+        "wv": layers.normal(ks[3], (di, di), di ** -0.5, dt),
+        "w_if": layers.normal(ks[4], (di, 2 * H), di ** -0.5, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "down": layers.normal(ks[5], (di, d), di ** -0.5, dt),
+    }
+
+
+def _mlstm_qkvif(p, xin, cfg: ArchConfig):
+    H = cfg.n_heads
+    B, S, di = xin.shape
+    dh = di // H
+    split = lambda a: a.reshape(B, S, H, dh)
+    q = split(xin @ p["wq"]) * dh ** -0.5
+    k = split(xin @ p["wk"]) * dh ** -0.5
+    v = split(xin @ p["wv"])
+    gif = xin.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_g = jax.nn.sigmoid(gif[..., :H])          # (B,S,H)
+    f_g = jax.nn.sigmoid(gif[..., H:])
+    return q, k, v, i_g, f_g
+
+
+def _mlstm_scan(q, k, v, i_g, f_g, C0, n0):
+    """Chunkwise mLSTM. q/k/v: (B,S,H,dh); gates (B,S,H); C0 (B,H,dh,dh)."""
+    B, S, H, dh = q.shape
+    chunk = min(MLSTM_CHUNK, S)
+    pad = (-S) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, i_g, f_g = z(q), z(k), z(v), z(i_g), z(f_g)
+    n_chunks = q.shape[1] // chunk
+    resh = lambda a: a.reshape(B, n_chunks, chunk, *a.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, ic, fc = map(resh, (q, k, v, i_g, f_g))
+
+    def step(carry, args):
+        C, n = carry                                  # (B,H,dh,dh), (B,H,dh)
+        qk, kk, vk, ik, fk = args                     # (B,c,H,...)
+        qf = qk.astype(jnp.float32)
+        kf = kk.astype(jnp.float32)
+        vf = vk.astype(jnp.float32)
+        logf = jnp.log(jnp.maximum(fk, 1e-6))         # (B,c,H)
+        F = jnp.cumsum(logf, axis=1)                  # decay from chunk start
+        # intra-chunk: y_t += sum_{j<=t} exp(F_t - F_j) i_j (q_t.k_j) v_j
+        d_mat = F[:, :, None, :] - F[:, None, :, :]   # (B,t,j,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(d_mat), 0.0)
+        w = w * ik[:, None, :, :]
+        s = jnp.einsum("bthd,bjhd->btjh", qf, kf) * w
+        y_intra = jnp.einsum("btjh,bjhd->bthd", s, vf)
+        n_intra = jnp.einsum("btjh,bjhd->bthd", w, kf)
+        # inter-chunk: y_t += exp(F_t) q_t . C_prev
+        eF = jnp.exp(F)                               # (B,c,H)
+        y_inter = jnp.einsum("bthd,bhde->bthe", qf * eF[..., None], C)
+        n_inter = n[:, None] * eF[..., None]          # (B,c,H,dh)
+        # normalizer: n_t = exp(F_t) n0 + sum_j exp(F_t - F_j) i_j k_j
+        n_all = n_inter + n_intra
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bthd,bthd->bth", n_all, qf)), 1.0)
+        y = (y_intra + y_inter) / denom[..., None]
+        # state update to end of chunk
+        Ftot = F[:, -1]                               # (B,H)
+        dec_j = jnp.exp(Ftot[:, None] - F)            # (B,c,H)
+        kv = jnp.einsum("bjhd,bjhe->bhde", kf * (ik * dec_j)[..., None], vf)
+        C_new = C * jnp.exp(Ftot)[..., None, None] + kv
+        n_new = n * jnp.exp(Ftot)[..., None] + jnp.einsum(
+            "bjhd->bhd", kf * (ik * dec_j)[..., None])
+        return (C_new, n_new), y
+
+    (C_f, n_f), ys = jax.lax.scan(step, (C0, n0), (qc, kc, vc, ic, fc))
+    y = ys.swapaxes(0, 1).reshape(B, n_chunks * chunk, H, dh)[:, :S]
+    return y, C_f, n_f
+
+
+def mlstm_forward(p: dict, x: jax.Array, cfg: ArchConfig,
+                  state=None, return_state: bool = False):
+    di, H = _di(cfg), cfg.n_heads
+    dh = di // H
+    xz = x @ p["up"]
+    xin, z = jnp.split(xz, [di], axis=-1)
+    q, k, v, i_g, f_g = _mlstm_qkvif(p, xin, cfg)
+    B = x.shape[0]
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+    else:
+        C0, n0 = state
+    y, C_f, n_f = _mlstm_scan(q, k, v, i_g, f_g, C0, n0)
+    y = y.reshape(B, x.shape[1], di).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["down"]
+    if return_state:
+        return out, (C_f, n_f)
+    return out
+
+
+def mlstm_decode(p: dict, x: jax.Array, C, n, cfg: ArchConfig):
+    """One-token mLSTM update. x: (B,1,d)."""
+    out, (C_f, n_f) = mlstm_forward(p, x, cfg, state=(C, n), return_state=True)
+    return out, C_f, n_f
+
+
+# ---------------------------------------------------------------- sLSTM ------
+
+def slstm_init(key, cfg: ArchConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        # input weights for (z, i, f, o)
+        "w_in": layers.normal(ks[0], (d, 4 * d), d ** -0.5, dt),
+        # block-diagonal recurrent weights per gate per head
+        "r": layers.normal(ks[1], (4, H, dh, dh), dh ** -0.5, dt),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "down": layers.normal(ks[2], (d, d), d ** -0.5, dt),
+    }
+
+
+def _slstm_step(p, carry, xt, cfg: ArchConfig):
+    """One sLSTM step. xt: (B, 4*d) pre-computed input projection."""
+    h, c, n, m = carry                          # each (B, H, dh)
+    H = cfg.n_heads
+    B = h.shape[0]
+    dh = cfg.d_model // H
+    rec = jnp.einsum("bhd,ghde->bghe", h.astype(jnp.float32),
+                     p["r"].astype(jnp.float32))          # (B,4,H,dh)
+    g = xt.astype(jnp.float32).reshape(B, 4, H, dh) + rec + \
+        p["b"].reshape(4, H, dh)
+    z_t = jnp.tanh(g[:, 0])
+    i_t = g[:, 1]                               # log-space input gate
+    f_t = g[:, 2]                               # log-space forget gate
+    o_t = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    c_new = f_p * c + i_p * z_t
+    n_new = f_p * n + i_p
+    h_new = o_t * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_state_init(cfg: ArchConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return (z, z, z, z - 1e9)   # m starts very negative
+
+
+def slstm_forward(p: dict, x: jax.Array, cfg: ArchConfig,
+                  state=None, return_state: bool = False):
+    B, S, d = x.shape
+    xin = x @ p["w_in"]                          # (B,S,4d)
+    carry = state if state is not None else slstm_state_init(cfg, B)
+
+    def step(carry, xt):
+        new = _slstm_step(p, carry, xt, cfg)
+        return new, new[0]
+
+    carry, hs = jax.lax.scan(step, carry, xin.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    out = y @ p["down"]
+    if return_state:
+        return out, carry
+    return out
+
+
+def slstm_decode(p: dict, x: jax.Array, state, cfg: ArchConfig):
+    out, new_state = slstm_forward(p, x, cfg, state=state, return_state=True)
+    return out, new_state

@@ -1,0 +1,3 @@
+"""Learning-rate schedules used by the paper's experiments."""
+
+from .schedules import linear_decay, triangular  # noqa: F401

@@ -1,0 +1,29 @@
+"""LR schedules from the paper's experiments (Appendix A)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def triangular(peak_lr: float, total_steps: int, pivot_frac: float = 0.2):
+    """CIFAR/FEMNIST schedule: linear warmup to ``pivot``, linear decay to 0."""
+    pivot = max(1, int(total_steps * pivot_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        up = peak_lr * step / pivot
+        down = peak_lr * jnp.maximum(total_steps - step, 0.0) / max(
+            total_steps - pivot, 1)
+        return jnp.where(step < pivot, up, down)
+
+    return lr
+
+
+def linear_decay(peak_lr: float, total_steps: int):
+    """PersonaChat schedule: linear decay from peak to 0."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        return peak_lr * jnp.maximum(total_steps - step, 0.0) / total_steps
+
+    return lr

@@ -1,0 +1,82 @@
+"""Roofline analysis plumbing: HLO collective parsing + shape adaptation."""
+
+import pytest
+
+from repro.launch import analysis, shapes
+from repro import configs
+
+HLO_SAMPLE = """
+  %all-reduce.1 = f32[5,1048576]{1,0} all-reduce(%x), replica_groups=...
+  %ag = bf16[16,4096,320]{2,1,0} all-gather(%y), dim=2
+  %rs.2 = (f32[128,64]{1,0}, f32[8]{0}) reduce-scatter(%a, %b), dim=0
+  %a2a = f32[16,8,64,512]{3,2,1,0} all-to-all(%c), dim=0
+  %cp = u32[1024]{0} collective-permute(%d), pairs=...
+  %notacoll = f32[4,4]{1,0} add(%e, %f)
+"""
+
+
+def test_collective_bytes_parsing():
+    out = analysis.collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 5 * 1048576 * 4
+    assert out["all-gather"] == 16 * 4096 * 320 * 2
+    assert out["reduce-scatter"] == 128 * 64 * 4 + 8 * 4
+    assert out["all-to-all"] == 16 * 8 * 64 * 512 * 4
+    assert out["collective-permute"] == 1024 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_collective_counts():
+    counts = analysis.count_collectives(HLO_SAMPLE)
+    assert counts == {"all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+                      "all-to-all": 1, "collective-permute": 1}
+
+
+def test_model_flops_train_vs_decode():
+    cfg = configs.get_config("qwen3-0.6b")
+    n = 750e6
+    train = analysis.model_flops_estimate(cfg, shapes.SHAPES["train_4k"], n)
+    dec = analysis.model_flops_estimate(cfg, shapes.SHAPES["decode_32k"], n)
+    assert train == 6 * n * 256 * 4096
+    assert dec == 2 * n * 128
+
+
+def test_active_params_moe():
+    cfg = configs.get_config("llama4-maverick-400b-a17b")
+    total = 394.7e9
+    active = analysis.active_params(cfg, total)
+    assert 8e9 < active < 20e9          # ~17B-class active
+
+
+def test_step_flops_exceeds_model_flops():
+    cfg = configs.get_config("deepseek-7b")
+    n = 7e9
+    shape = shapes.SHAPES["prefill_32k"]
+    mf = analysis.model_flops_estimate(cfg, shape, n)
+    sf = analysis.step_flops_estimate(cfg, shape, n)
+    assert sf > mf                       # attention term on top
+
+
+class TestShapeAdaptation:
+    def test_long_500k_dense_gets_window(self):
+        cfg = configs.get_config("deepseek-7b")
+        out = shapes.adapt_config(cfg, shapes.SHAPES["long_500k"])
+        assert out.sliding_window == shapes.LONG_CONTEXT_WINDOW
+
+    def test_long_500k_ssm_native(self):
+        cfg = configs.get_config("xlstm-350m")
+        out = shapes.adapt_config(cfg, shapes.SHAPES["long_500k"])
+        assert out.sliding_window == 0
+
+    def test_long_500k_hybrid_native(self):
+        cfg = configs.get_config("jamba-v0.1-52b")
+        out = shapes.adapt_config(cfg, shapes.SHAPES["long_500k"])
+        assert out.sliding_window == 0
+
+    def test_whisper_long_skips(self):
+        cfg = configs.get_config("whisper-small")
+        with pytest.raises(shapes.SkipShape):
+            shapes.adapt_config(cfg, shapes.SHAPES["long_500k"])
+
+    def test_other_shapes_untouched(self):
+        cfg = configs.get_config("glm4-9b")
+        assert shapes.adapt_config(cfg, shapes.SHAPES["train_4k"]) == cfg

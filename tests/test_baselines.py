@@ -1,0 +1,103 @@
+"""Baseline optimizers the paper compares against (Sec. 5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import fedavg, local_topk, uncompressed
+from repro.core import compression
+from repro.core import layout as L
+from repro.core import topk as TK
+
+
+class TestUncompressed:
+    def test_momentum_sgd(self):
+        cfg = uncompressed.SGDConfig(momentum=0.9)
+        p = {"w": jnp.ones((4,))}
+        st = uncompressed.init_state(p, cfg)
+        g = {"w": jnp.ones((4,))}
+        p1, st = uncompressed.step(p, g, st, 0.1, cfg)
+        p2, st = uncompressed.step(p1, g, st, 0.1, cfg)
+        np.testing.assert_allclose(p1["w"], 0.9)
+        np.testing.assert_allclose(p2["w"], 0.9 - 0.1 * 1.9)
+
+
+class TestLocalTopK:
+    def test_compress_keeps_k_largest(self, rng):
+        p = {"w": jnp.zeros((64,))}
+        lay = L.build_layout(p)
+        cfg = local_topk.LocalTopKConfig(k=4)
+        g = {"w": jnp.asarray(rng.normal(size=64).astype(np.float32))}
+        delta, _ = local_topk.client_compress(g, None, 1.0, lay, cfg)
+        dense = np.asarray(TK.densify(delta, lay))
+        want = set(np.argsort(-np.abs(np.asarray(g["w"])))[:4])
+        assert set(np.nonzero(dense)[0]) == want
+
+    def test_error_feedback_accumulates(self, rng):
+        p = {"w": jnp.zeros((64,))}
+        lay = L.build_layout(p)
+        cfg = local_topk.LocalTopKConfig(k=1, use_error_feedback=True)
+        err = local_topk.init_client_error(p)
+        g = {"w": jnp.zeros((64,)).at[5].set(1.0).at[9].set(0.6)}
+        d1, err = local_topk.client_compress(g, err, 1.0, lay, cfg)
+        # idx 9 not uploaded -> in error; next round with zero grad it wins
+        zero = {"w": jnp.zeros((64,))}
+        d2, err = local_topk.client_compress(zero, err, 1.0, lay, cfg)
+        dense2 = np.asarray(TK.densify(d2, lay))
+        assert np.abs(dense2[9]) > 0.5
+
+    def test_server_sums_and_applies(self, rng):
+        p = {"w": jnp.zeros((64,))}
+        lay = L.build_layout(p)
+        cfg = local_topk.LocalTopKConfig(k=2)
+        st = local_topk.init_server_state(p, cfg)
+        gs = [{"w": jnp.zeros((64,)).at[i].set(1.0)} for i in range(3)]
+        deltas = [local_topk.client_compress(g, None, 1.0, lay, cfg)[0]
+                  for g in gs]
+        p2, st = local_topk.server_apply(p, deltas, st, lay, cfg)
+        for i in range(3):
+            assert np.isclose(float(p2["w"][i]), -1.0 / 3, atol=1e-5)
+
+
+class TestFedAvg:
+    def test_local_steps_deterministic(self):
+        p = {"w": jnp.ones((2,))}
+        cfg = fedavg.FedAvgConfig(local_epochs=2)
+
+        def grad_fn(params, batch):
+            return {"w": params["w"] * batch}   # dL/dw = w * x
+
+        batches = jnp.asarray([1.0, 1.0])       # two local steps
+        delta = fedavg.client_update(p, batches, 0.5, grad_fn, cfg)
+        # w: 1 -> 1-0.5*1 = 0.5 -> 0.5-0.5*0.5 = 0.25; delta = w0 - wK
+        np.testing.assert_allclose(delta["w"], 0.75 * np.ones(2), rtol=1e-6)
+
+    def test_server_weighted_average(self):
+        p = {"w": jnp.zeros((2,))}
+        cfg = fedavg.FedAvgConfig()
+        st = fedavg.init_server_state(p, cfg)
+        deltas = [{"w": jnp.ones((2,))}, {"w": 3 * jnp.ones((2,))}]
+        p2, st = fedavg.server_apply(p, deltas, [1.0, 3.0], st, cfg)
+        np.testing.assert_allclose(p2["w"], -(0.25 * 1 + 0.75 * 3)
+                                   * np.ones(2))
+
+
+class TestCompressionAccounting:
+    def test_fetchsgd_beats_uncompressed_upload(self):
+        d = 124_000_000
+        meter = compression.TrafficMeter(d=d)
+        rt = compression.fetchsgd_round(rows=5, cols=1_240_000, k=25_000)
+        for _ in range(100):
+            meter.record(rt, clients=4)
+        c = meter.compression(clients_per_round=4)
+        # paper Table 1: sketch 1.24M cols -> ~100x upload compression
+        assert 15 < c["upload_x"] < 25      # 5 rows here vs paper's table
+        assert c["download_x"] > 1000
+        assert c["total_x"] > 30
+
+    def test_uncompressed_is_1x(self):
+        meter = compression.TrafficMeter(d=1000)
+        for _ in range(10):
+            meter.record(compression.uncompressed_round(1000), clients=2)
+        c = meter.compression(clients_per_round=2)
+        assert c["upload_x"] == 1.0 and c["download_x"] == 1.0

@@ -1,0 +1,152 @@
+"""Count Sketch data-structure properties (paper Appendix C)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import count_sketch as cs
+from repro.core import hashing
+
+ROWS, COLS = 5, 4096
+
+
+def _sketch(v, rows=ROWS, cols=COLS, key=0, offset=0):
+    return cs.sketch_chunk(jnp.asarray(v), offset, rows, cols, key)
+
+
+class TestLinearity:
+    def test_additive(self, rng):
+        a = rng.normal(size=1000).astype(np.float32)
+        b = rng.normal(size=1000).astype(np.float32)
+        np.testing.assert_allclose(_sketch(a) + _sketch(b), _sketch(a + b),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_scaling(self, rng):
+        a = rng.normal(size=777).astype(np.float32)
+        np.testing.assert_allclose(3.0 * _sketch(a), _sketch(3 * a),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_slice_composition(self, rng):
+        """S(g) == S(g[:m] at offset 0) + S(g[m:] at offset m) — the property
+        that makes model-parallel / chunked sketching exact."""
+        g = rng.normal(size=5000).astype(np.float32)
+        for m in (1, 17, 2500, 4999):
+            part = (cs.sketch_chunk(jnp.asarray(g[:m]), 0, ROWS, COLS, 0)
+                    + cs.sketch_chunk(jnp.asarray(g[m:]), m, ROWS, COLS, 0))
+            np.testing.assert_allclose(part, _sketch(g), rtol=1e-5, atol=1e-4)
+
+    def test_merge_object_api(self, rng):
+        g1 = rng.normal(size=100).astype(np.float32)
+        g2 = rng.normal(size=100).astype(np.float32)
+        s1 = cs.sketch_vector(jnp.asarray(g1), ROWS, COLS)
+        s2 = cs.sketch_vector(jnp.asarray(g2), ROWS, COLS)
+        merged = s1 + s2
+        np.testing.assert_allclose(merged.table,
+                                   cs.sketch_vector(jnp.asarray(g1 + g2),
+                                                    ROWS, COLS).table,
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_incompatible_merge_raises(self):
+        s1 = cs.zeros(3, 64, key=0)
+        s2 = cs.zeros(3, 64, key=1)
+        with pytest.raises(ValueError):
+            _ = s1 + s2
+
+
+class TestRecovery:
+    def test_heavy_hitters_recovered(self, rng):
+        g = rng.normal(scale=0.05, size=20000).astype(np.float32)
+        hot = rng.choice(20000, size=20, replace=False)
+        g[hot] = rng.choice([-1, 1], size=20) * 30.0
+        est = cs.estimate_chunk(_sketch(g), 0, 20000, ROWS, COLS, 0)
+        np.testing.assert_allclose(np.asarray(est)[hot], g[hot], rtol=0.05,
+                                   atol=1.0)
+
+    def test_estimate_roughly_unbiased_on_noise(self, rng):
+        g = rng.normal(size=5000).astype(np.float32)
+        est = np.asarray(cs.estimate_chunk(_sketch(g), 0, 5000, ROWS, COLS, 0))
+        # median-of-rows estimates: error bounded by ||g||/sqrt(cols)-ish
+        err = est - g
+        assert np.abs(err.mean()) < 0.2
+        assert np.abs(err).max() < np.linalg.norm(g) * 5 / np.sqrt(COLS)
+
+    def test_topk_of_estimates_matches_topk(self, rng):
+        g = rng.normal(scale=0.01, size=8192).astype(np.float32)
+        hot = rng.choice(8192, size=10, replace=False)
+        g[hot] = np.linspace(5, 10, 10)
+        est = np.asarray(cs.estimate_chunk(_sketch(g), 0, 8192, ROWS, COLS, 0))
+        top_est = set(np.argsort(-np.abs(est))[:10])
+        assert top_est == set(hot)
+
+    def test_l2_estimate(self, rng):
+        g = rng.normal(size=4000).astype(np.float32)
+        s = cs.sketch_vector(jnp.asarray(g), ROWS, COLS)
+        assert abs(float(s.l2_estimate()) - np.linalg.norm(g)) \
+            < 0.25 * np.linalg.norm(g)
+
+
+class TestSparseOps:
+    def test_sketch_sparse_matches_dense(self, rng):
+        g = np.zeros(1000, np.float32)
+        idxs = rng.choice(1000, size=30, replace=False)
+        g[idxs] = rng.normal(size=30)
+        hi, lo = hashing.split64(0, 1000)
+        tbl = cs.sketch_sparse(hi[idxs], lo[idxs], jnp.asarray(g[idxs]),
+                               ROWS, COLS, 0)
+        np.testing.assert_allclose(tbl, _sketch(g), rtol=1e-5, atol=1e-5)
+
+    def test_hit_mask_zeroes_extracted(self, rng):
+        g = rng.normal(size=500).astype(np.float32)
+        tbl = _sketch(g)
+        hi, lo = hashing.split64(0, 500)
+        idxs = np.arange(0, 500, 50)
+        mask = cs.hit_mask_ids(hi[idxs], lo[idxs], ROWS, COLS, 0)
+        z = jnp.where(mask, 0.0, tbl)
+        est = np.asarray(cs.estimate_chunk(z, 0, 500, ROWS, COLS, 0))
+        # zeroed cells -> extracted coords estimate ~0
+        assert np.abs(est[idxs]).max() < np.abs(g[idxs]).min() + 1e-5
+
+
+class TestDynOffsets:
+    def test_dyn_matches_static(self, rng):
+        g = rng.normal(size=300).astype(np.float32)
+        for off in (0, 1, 2**31, 2**32 - 100, 2**40 + 12345):
+            ref = cs.sketch_chunk(jnp.asarray(g), off, ROWS, COLS, 0)
+            dyn = cs.sketch_chunk_dyn(
+                jnp.asarray(g), jnp.uint32(off & 0xFFFFFFFF),
+                jnp.uint32(off >> 32), ROWS, COLS, 0)
+            np.testing.assert_allclose(dyn, ref, rtol=1e-6, atol=1e-6)
+            e_ref = cs.estimate_chunk(ref, off, 300, ROWS, COLS, 0)
+            e_dyn = cs.estimate_chunk_dyn(
+                ref, jnp.uint32(off & 0xFFFFFFFF), jnp.uint32(off >> 32),
+                300, ROWS, COLS, 0)
+            np.testing.assert_allclose(e_dyn, e_ref, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 2000), seed=st.integers(0, 2**31 - 1),
+       split=st.floats(0.0, 1.0))
+def test_property_linearity_any_split(n, seed, split):
+    """hypothesis: chunked sketching equals whole-vector sketching."""
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=n).astype(np.float32)
+    m = int(n * split)
+    whole = cs.sketch_chunk(jnp.asarray(g), 0, 3, 512, 7)
+    parts = (cs.sketch_chunk(jnp.asarray(g[:m]), 0, 3, 512, 7)
+             + cs.sketch_chunk(jnp.asarray(g[m:]), m, 3, 512, 7))
+    np.testing.assert_allclose(parts, whole, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), mag=st.floats(10.0, 1000.0))
+def test_property_single_heavy_hitter_recovered(seed, mag):
+    """hypothesis: a single dominant coordinate is always recovered."""
+    rng = np.random.default_rng(seed)
+    g = rng.normal(scale=0.01, size=4096).astype(np.float32)
+    pos = int(rng.integers(0, 4096))
+    g[pos] = mag
+    est = np.asarray(cs.estimate_chunk(
+        cs.sketch_chunk(jnp.asarray(g), 0, 5, 2048, 3), 0, 4096, 5, 2048, 3))
+    assert int(np.argmax(np.abs(est))) == pos

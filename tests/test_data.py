@@ -1,0 +1,75 @@
+"""Federated data substrate: determinism, non-i.i.d. structure, power law."""
+
+import numpy as np
+
+from repro.data import federated, synthetic
+
+
+class TestClassShardLM:
+    def test_deterministic(self):
+        ds = synthetic.ClassShardLM(vocab=256, seq_len=16, n_clients=100)
+        a = ds.client_batch(7)
+        b = ds.client_batch(7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_labels_shifted_tokens(self):
+        ds = synthetic.ClassShardLM(vocab=256, seq_len=16)
+        b = ds.client_batch(3)
+        assert b["tokens"].shape == b["labels"].shape == (5, 16)
+        # labels are next-token: token[t+1] == label[t]
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_non_iid_across_classes(self):
+        """Clients of different classes follow different transition tables."""
+        ds = synthetic.ClassShardLM(vocab=64, seq_len=256, n_classes=4,
+                                    samples_per_client=8)
+
+        def transition_counts(client):
+            b = ds.client_batch(client)
+            t = b["tokens"]
+            m = np.zeros((64, 64))
+            for row in t:
+                for a, bb in zip(row[:-1], row[1:]):
+                    m[a, bb] += 1
+            return m / max(m.sum(), 1)
+
+        same = np.abs(transition_counts(0) - transition_counts(4)).sum()
+        diff = np.abs(transition_counts(0) - transition_counts(1)).sum()
+        assert diff > same  # class 0 vs 4 share a chain; 0 vs 1 don't
+
+    def test_class_assignment(self):
+        ds = synthetic.ClassShardLM(vocab=64, seq_len=8, n_classes=10)
+        assert ds.client_class(23) == 3
+
+
+class TestPersonaLM:
+    def test_power_law_sizes(self):
+        ds = synthetic.PersonaLM(vocab=512, seq_len=8, n_clients=4000)
+        sizes = np.array([ds.client_size(i) for i in range(4000)])
+        assert sizes.min() >= 1
+        # heavy tail: max >> median (paper Sec. 1: power-law user data)
+        assert sizes.max() > 5 * np.median(sizes)
+
+    def test_topic_concentration(self):
+        ds = synthetic.PersonaLM(vocab=500, seq_len=64, n_topics=50)
+        b = ds.client_batch(11)
+        band = 500 // 50
+        topics = np.unique(b["tokens"] // band)
+        assert len(topics) <= 2   # personas draw from 2 topics
+
+
+class TestSampling:
+    def test_sampler_no_replacement(self):
+        c = federated.sample_clients(100, 20, round_idx=0)
+        assert len(set(c.tolist())) == 20
+
+    def test_sampler_varies_by_round(self):
+        a = federated.sample_clients(1000, 10, round_idx=0)
+        b = federated.sample_clients(1000, 10, round_idx=1)
+        assert set(a.tolist()) != set(b.tolist())
+
+    def test_cohort_padding(self):
+        ds = synthetic.ClassShardLM(vocab=64, seq_len=8, samples_per_client=3)
+        batch = federated.cohort_batch(ds, [0, 1], pad_to=10)
+        assert batch["tokens"].shape == (10, 8)
+        assert batch["sample_weight"].sum() == 6

@@ -1,0 +1,151 @@
+"""FetchSGD optimizer semantics (Algorithm 1 + Sec. 5 practical variants)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fetchsgd as F
+from repro.core import layout as L
+from repro.core import topk as TK
+
+
+def make(rows=5, cols=4096, k=8, **kw):
+    return F.FetchSGDConfig(rows=rows, cols=cols, k=k, **kw)
+
+
+@pytest.fixture
+def small():
+    params = {"a": jnp.zeros((32, 16)), "b": jnp.zeros((64,))}
+    return params, L.build_layout(params)
+
+
+class TestServerStep:
+    def test_heavy_gradient_extracted_and_applied(self, small, rng):
+        params, lay = small
+        cfg = make()
+        st = F.init_state(cfg)
+        g = {"a": jnp.zeros((32, 16)).at[2, 3].set(5.0),
+             "b": jnp.zeros((64,))}
+        p2, st2, delta = F.step(params, g, st, 0.5, lay, cfg)
+        assert np.isclose(float(p2["a"][2, 3]), -2.5, atol=1e-3)
+
+    def test_momentum_accumulates(self, small):
+        params, lay = small
+        cfg = make(momentum=0.9, momentum_masking=False, k=1)
+        st = F.init_state(cfg)
+        g = {"a": jnp.zeros((32, 16)).at[0, 0].set(1.0), "b": jnp.zeros((64,))}
+        # two identical grads: update2 ~ lr*(rho*u1 + g) + leftover error
+        _, st1, d1 = F.step(params, g, st, 1.0, lay, cfg)
+        _, st2, d2 = F.step(params, g, st1, 1.0, lay, cfg)
+        v1 = float(TK.densify(d1, lay)[0])
+        v2 = float(TK.densify(d2, lay)[0])
+        assert np.isclose(v1, 1.0, atol=0.05)
+        assert np.isclose(v2, 1.9, atol=0.1)   # rho*1 + 1
+
+    def test_error_feedback_reintroduces_mass(self, small):
+        """A coordinate too small for top-k accumulates until extracted."""
+        params, lay = small
+        cfg = make(k=1, momentum=0.0)
+        st = F.init_state(cfg)
+        g = {"a": jnp.zeros((32, 16)).at[0, 0].set(10.0).at[1, 1].set(1.0),
+             "b": jnp.zeros((64,))}
+        # round 1: k=1 extracts only a[0,0]; a[1,1] stays in the error sketch
+        p, st, d1 = F.step(params, g, st, 1.0, lay, cfg)
+        dense1 = np.asarray(TK.densify(d1, lay))
+        assert np.abs(dense1[0]) > 5.0              # a[0,0] extracted
+        assert np.abs(dense1[16 + 1]) < 1e-6        # a[1,1] withheld
+        # round 2: no new gradient; the withheld coordinate must surface
+        zero = jax.tree.map(jnp.zeros_like, params)
+        p, st, d2 = F.step(p, zero, st, 1.0, lay, cfg)
+        dense2 = np.asarray(TK.densify(d2, lay))
+        assert np.abs(dense2[16 + 1]) > 0.5         # a[1,1] re-introduced
+
+    def test_zero_vs_subtract_modes(self, small):
+        params, lay = small
+        g = {"a": jnp.zeros((32, 16)).at[3, 3].set(4.0), "b": jnp.zeros((64,))}
+        for mode in ("zero", "subtract"):
+            cfg = make(error_mode=mode, k=1, momentum=0.0)
+            st = F.init_state(cfg)
+            p, st, d = F.step(params, g, st, 1.0, lay, cfg)
+            # after extraction, the error sketch no longer returns a[3,3]
+            est = TK.topk_from_sketch(st.error_sketch, lay, 1, cfg.hash_key)
+            leftover = float(jnp.abs(est.values).max())
+            assert leftover < 0.5, mode
+
+    def test_momentum_masking_zeroes_extracted(self, small):
+        params, lay = small
+        g = {"a": jnp.zeros((32, 16)).at[5, 5].set(2.0), "b": jnp.zeros((64,))}
+        cfg = make(k=1, momentum=0.9, momentum_masking=True)
+        st = F.init_state(cfg)
+        _, st1, d = F.step(params, g, st, 1.0, lay, cfg)
+        # extracted coordinate's momentum cells were zeroed
+        d2 = TK.topk_from_sketch(st1.momentum_sketch, lay, 1, cfg.hash_key)
+        assert float(jnp.abs(d2.values).max()) < 0.2
+
+    def test_step_counter(self, small):
+        params, lay = small
+        cfg = make()
+        st = F.init_state(cfg)
+        g = jax.tree.map(jnp.zeros_like, params)
+        _, st, _ = F.step(params, g, st, 1.0, lay, cfg)
+        _, st, _ = F.step(params, g, st, 1.0, lay, cfg)
+        assert int(st.step) == 2
+
+
+class TestLinearityEquivalence:
+    def test_client_vs_server_aggregation(self, small, rng):
+        """mean of client sketches == sketch of mean gradient (Sec. 3.2)."""
+        params, lay = small
+        cfg = make()
+        gs = []
+        for i in range(4):
+            gs.append({
+                "a": jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32)),
+                "b": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))})
+        tables = [F.sketch_grads(g, lay, cfg) for g in gs]
+        mean_table = sum(tables) / 4
+        gmean = jax.tree.map(lambda *x: sum(x) / 4, *gs)
+        np.testing.assert_allclose(mean_table, F.sketch_grads(gmean, lay, cfg),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestConvergence:
+    def test_quadratic_converges(self, rng):
+        """FetchSGD drives ||w - w*||^2 down on a separable quadratic."""
+        target = jnp.asarray(rng.normal(size=(64,)).astype(np.float32)) * 3
+        params = {"w": jnp.zeros((64,))}
+        lay = L.build_layout(params)
+        cfg = make(rows=5, cols=2048, k=16, momentum=0.0)
+        st = F.init_state(cfg)
+        w = params
+        for t in range(60):
+            g = {"w": w["w"] - target}
+            w, st, _ = F.step(w, g, st, 0.3, lay, cfg)
+        err = float(jnp.linalg.norm(w["w"] - target) / jnp.linalg.norm(target))
+        assert err < 0.15, err
+
+    def test_momentum_speeds_quadratic(self, rng):
+        target = jnp.asarray(rng.normal(size=(64,)).astype(np.float32)) * 3
+
+        def run(momentum):
+            params = {"w": jnp.zeros((64,))}
+            lay = L.build_layout(params)
+            cfg = make(rows=5, cols=2048, k=16, momentum=momentum)
+            st = F.init_state(cfg)
+            w = params
+            for t in range(40):
+                g = {"w": w["w"] - target}
+                w, st, _ = F.step(w, g, st, 0.1, lay, cfg)
+            return float(jnp.linalg.norm(w["w"] - target))
+
+        assert run(0.9) < run(0.0)
+
+
+class TestAccounting:
+    def test_bytes(self):
+        cfg = make(rows=5, cols=1 << 20, k=50000)
+        assert F.upload_bytes(cfg) == 5 * (1 << 20) * 4
+        assert F.download_bytes(cfg) == 50000 * 8

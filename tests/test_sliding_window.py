@@ -1,0 +1,83 @@
+"""Sliding-window error accumulation (paper Sec. 4.2 / Appendix D)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import count_sketch as cs
+from repro.core import sliding_window as sw
+
+ROWS, COLS = 5, 2048
+
+
+def g_sketch(v):
+    return cs.sketch_chunk(jnp.asarray(v), 0, ROWS, COLS, 0)
+
+
+class TestNaiveWindow:
+    def test_suffix_sums_exact(self, rng):
+        """At every t, sw_suffix(I') holds exactly the last I' inserts."""
+        I = 4
+        s = sw.sw_init(I, ROWS, COLS)
+        gs = [rng.normal(size=512).astype(np.float32) for _ in range(10)]
+        for t, g in enumerate(gs):
+            s = sw.sw_insert(s, g_sketch(g))
+            for I_ in range(1, min(I, t + 1) + 1):
+                want = g_sketch(np.sum(gs[t - I_ + 1:t + 1], axis=0))
+                got = sw.sw_suffix(s, jnp.asarray(I_))
+                np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3,
+                                           err_msg=f"t={t} I'={I_}")
+
+    def test_signal_spread_over_window_recovered(self, rng):
+        """A coordinate whose mass is split over I gradients is invisible per
+        step but heavy in the window sum — the scheme must expose it."""
+        I = 4
+        s = sw.sw_init(I, ROWS, COLS)
+        pos = 123
+        for t in range(I):
+            g = rng.normal(scale=0.01, size=512).astype(np.float32)
+            g[pos] += 5.0  # per-step small vs noise*sqrt(d), heavy over I
+            s = sw.sw_insert(s, g_sketch(g))
+        win = sw.sw_suffix(s, jnp.asarray(I))
+        est = np.asarray(cs.estimate_chunk(win, 0, 512, ROWS, COLS, 0))
+        assert int(np.argmax(np.abs(est))) == pos
+        assert est[pos] > 15.0
+
+    def test_old_noise_discarded(self, rng):
+        """After I inserts of pure noise, the 1-suffix contains only the
+        newest sketch — O(t) noise growth is prevented."""
+        I = 3
+        s = sw.sw_init(I, ROWS, COLS)
+        for _ in range(7):
+            s = sw.sw_insert(s, g_sketch(
+                rng.normal(size=512).astype(np.float32)))
+        last = rng.normal(size=512).astype(np.float32)
+        s = sw.sw_insert(s, g_sketch(last))
+        np.testing.assert_allclose(sw.sw_suffix(s, jnp.asarray(1)),
+                                   g_sketch(last), rtol=1e-4, atol=1e-3)
+
+
+class TestLogWindow:
+    def test_memory_is_logarithmic(self):
+        s = sw.lw_init(64, ROWS, COLS)
+        assert s.tables.shape[0] <= 8          # log2(64)+2
+
+    def test_suffix_covers_requested_window(self, rng):
+        """The returned level covers >= the requested window (smooth-
+        histogram (1+eps) relaxation): signal in the last I' inserts is
+        present in the answer."""
+        s = sw.lw_init(8, ROWS, COLS)
+        gs = []
+        for t in range(8):
+            g = rng.normal(scale=0.01, size=512).astype(np.float32)
+            gs.append(g)
+            s = sw.lw_insert(s, g_sketch(g))
+        # inject heavy coordinate in the last 3 inserts
+        s2 = s
+        pos = 77
+        for t in range(3):
+            g = rng.normal(scale=0.01, size=512).astype(np.float32)
+            g[pos] += 4.0
+            s2 = sw.lw_insert(s2, g_sketch(g))
+        win = sw.lw_suffix(s2, 3)
+        est = np.asarray(cs.estimate_chunk(win, 0, 512, ROWS, COLS, 0))
+        assert int(np.argmax(np.abs(est))) == pos

@@ -1,0 +1,115 @@
+"""Layout invariants + distributed top-k + sparse apply (incl. EP owners)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fetchsgd as F
+from repro.core import layout as L
+from repro.core import topk as TK
+
+
+def test_layout_partitions_flat_space():
+    params = {"a": jnp.zeros((7, 13)), "b": jnp.zeros((5,)),
+              "c": jnp.zeros((2, 3, 11))}
+    lay = L.build_layout(params, chunk_elems=32)
+    covered = sorted((ch.offset, ch.offset + ch.size) for ch in lay.chunks)
+    assert covered[0][0] == 0
+    for (s1, e1), (s2, e2) in zip(covered, covered[1:]):
+        assert e1 == s2
+    assert covered[-1][1] == lay.total == 7 * 13 + 5 + 66
+
+
+@settings(max_examples=20, deadline=None)
+@given(r1=st.integers(1, 9), c1=st.integers(1, 9), n2=st.integers(1, 40),
+       cap=st.integers(4, 64))
+def test_property_layout_coverage(r1, c1, n2, cap):
+    params = {"x": jnp.zeros((r1, c1)), "y": jnp.zeros((n2,))}
+    lay = L.build_layout(params, chunk_elems=cap if cap >= c1 else c1)
+    assert sum(ch.size for ch in lay.chunks) == lay.total == r1 * c1 + n2
+    # group chunk ids are a permutation of all chunk ids
+    ids = sorted(i for g in lay.groups for i in g.chunk_ids)
+    assert ids == list(range(lay.num_chunks))
+
+
+def test_topk_exact_on_small_layout(rng):
+    params = {"a": jnp.zeros((16, 16)), "b": jnp.zeros((100,))}
+    lay = L.build_layout(params, chunk_elems=64)
+    vals = rng.normal(size=356).astype(np.float32)
+    views = L.leaf_views({"a": jnp.asarray(vals[:256].reshape(16, 16)),
+                          "b": jnp.asarray(vals[256:])}, lay)
+    delta = TK.topk_dense(views, lay, 10)
+    dense = np.asarray(TK.densify(delta, lay))
+    want_idx = set(np.argsort(-np.abs(vals))[:10])
+    got_idx = set(np.nonzero(dense)[0])
+    assert got_idx == want_idx
+    np.testing.assert_allclose(dense[list(got_idx)], vals[list(got_idx)],
+                               rtol=1e-6)
+
+
+def test_apply_delta_roundtrip(rng):
+    params = {"a": jnp.zeros((16, 16)), "b": jnp.zeros((100,))}
+    lay = L.build_layout(params, chunk_elems=64)
+    vals = rng.normal(size=356).astype(np.float32)
+    views = L.leaf_views({"a": jnp.asarray(vals[:256].reshape(16, 16)),
+                          "b": jnp.asarray(vals[256:])}, lay)
+    delta = TK.topk_dense(views, lay, 25)
+    applied = TK.apply_delta(params, lay, delta)
+    flat = np.concatenate([np.asarray(applied["a"]).ravel(),
+                           np.asarray(applied["b"]).ravel()])
+    np.testing.assert_allclose(flat, -np.asarray(TK.densify(delta, lay)),
+                               rtol=1e-6)
+
+
+class TestExpertParallel:
+    def make(self, rng, ep=4):
+        params = {"experts": jnp.zeros((3, 8, 32)), "w": jnp.zeros((64, 8))}
+        lay = L.build_layout(params, chunk_elems=128,
+                             data_shard_axis={"experts": 1}, ep=ep)
+        g = {"experts": jnp.asarray(rng.normal(size=(3, 8, 32)).astype(np.float32)),
+             "w": jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))}
+        return params, lay, g
+
+    def test_owner_alignment(self, rng):
+        _, lay, _ = self.make(rng)
+        for ch in lay.chunks:
+            if ch.owner is not None:
+                assert 0 <= ch.owner < 4
+        owners = {ch.owner for ch in lay.chunks if "experts" in ch.path}
+        assert owners == {0, 1, 2, 3}
+
+    def test_sharded_sketch_equals_global(self, rng):
+        params, lay, g = self.make(rng)
+        cfg = F.FetchSGDConfig(rows=3, cols=2048, k=8)
+        ref_lay = L.build_layout(params, chunk_elems=128)
+        T_ref = F.sketch_grads(g, ref_lay, cfg)
+        T_sum = jnp.zeros((3, 2048))
+        for s in range(4):
+            g_loc = {"experts": g["experts"][:, s * 2:(s + 1) * 2],
+                     "w": g["w"] / 4.0}
+            T_sum = T_sum + F.sketch_grads(g_loc, lay, cfg,
+                                           shard_idx=jnp.asarray(s),
+                                           local=True)
+        np.testing.assert_allclose(T_sum, T_ref, rtol=1e-4, atol=1e-4)
+
+    def test_owner_masked_apply_reconstructs(self, rng):
+        params, lay, g = self.make(rng)
+        cfg = F.FetchSGDConfig(rows=3, cols=2048, k=12)
+        table = F.sketch_grads(g, lay.__class__(**{
+            **lay.__dict__}) if False else F.sketch_grads(g, lay, cfg) * 0 + 1,
+            lay, cfg) if False else F.sketch_grads(g, L.build_layout(
+                params, chunk_elems=128), cfg)
+        st = F.init_state(cfg)
+        delta, _ = F.server_step(table, st, 1.0, lay, cfg)
+        full = TK.apply_delta(params, lay, delta)
+        parts = []
+        for s in range(4):
+            local = {"experts": jnp.zeros((3, 2, 32)),
+                     "w": jnp.zeros((64, 8))}
+            parts.append(TK.apply_delta(local, lay, delta,
+                                        shard_idx=jnp.asarray(s), local=True))
+        rec = jnp.concatenate([p["experts"] for p in parts], axis=1)
+        np.testing.assert_allclose(rec, full["experts"], rtol=1e-6)
+        np.testing.assert_allclose(parts[0]["w"], full["w"], rtol=1e-6)
