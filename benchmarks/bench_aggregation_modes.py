@@ -1,0 +1,61 @@
+"""Federation-runtime aggregation policies: round throughput + bytes.
+
+Runs the micro federated LM through ``repro.fed`` under each aggregation
+policy (flat / tree / async) on identical cohorts and reports:
+
+* rounds/sec (wall-clock, after a warm-up round that absorbs jit compile),
+* upload bytes per round (the policy's bytes-on-wire, from
+  ``AggregationStats`` — tree pays extra internal-node forwards in
+  exchange for O(fanout) root ingress),
+* final-round loss (all three must track each other: linearity).
+
+The async row also runs a straggler variant so the buffered/late path is
+exercised, not just the degenerate flat-equivalent case.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import fetchsgd as F
+from repro.fed import FederationConfig, Orchestrator, StragglerModel
+from repro.launch import simulate
+
+ROUNDS = 6
+CLIENTS = 4
+
+
+def _run(policy: str, straggler: StragglerModel | None = None):
+    cfg = simulate.micro_cfg()
+    ds = simulate.micro_dataset(cfg)
+    fs = F.FetchSGDConfig(rows=3, cols=1 << 12, k=128)
+    fed_cfg = FederationConfig(
+        rounds=ROUNDS, clients_per_round=CLIENTS, aggregate=policy,
+        tree_fanout=2, straggler=straggler or StragglerModel())
+    orch = Orchestrator(cfg, fs, fed_cfg, ds)
+    orch.run_round(0)                      # warm-up: jit compile
+    t0 = time.time()
+    recs = [orch.run_round(r) for r in range(1, ROUNDS)]
+    dt = time.time() - t0
+    n = len(recs)
+    up = sum(r.upload_bytes for r in recs) / n
+    late = sum(r.n_late for r in recs)
+    loss = next((r.loss for r in reversed(recs) if r.loss is not None),
+                float("nan"))
+    return dt / n, up, late, loss
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for policy in ("flat", "tree", "async"):
+        per_round, up, late, loss = _run(policy)
+        rows.append((f"fed_aggregate_{policy}", per_round * 1e6,
+                     f"rounds/s={1.0/per_round:.2f} "
+                     f"upload_bytes/round={up:.0f} loss={loss:.3f}"))
+    per_round, up, late, loss = _run(
+        "async", StragglerModel(straggle_prob=0.4, max_delay=2))
+    rows.append((f"fed_aggregate_async_stragglers", per_round * 1e6,
+                 f"rounds/s={1.0/per_round:.2f} "
+                 f"upload_bytes/round={up:.0f} late_merged={late} "
+                 f"loss={loss:.3f}"))
+    return rows

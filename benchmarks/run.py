@@ -11,8 +11,8 @@ from __future__ import annotations
 import sys
 import traceback
 
-from . import (bench_compression, bench_convergence, bench_kernels,
-               bench_sketch_aggregation, bench_true_topk)
+from . import (bench_aggregation_modes, bench_compression, bench_convergence,
+               bench_kernels, bench_sketch_aggregation, bench_true_topk)
 
 MODULES = [
     ("table1", bench_compression),
@@ -20,6 +20,7 @@ MODULES = [
     ("fig3/4/5", bench_convergence),
     ("fig10", bench_true_topk),
     ("sec3.2", bench_sketch_aggregation),
+    ("fed-runtime", bench_aggregation_modes),
 ]
 
 

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# CI entry: tier-1 test suite + federated simulation smoke.
+# Usage: scripts/ci.sh  (from the repo root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt || \
+    echo "WARN: dev deps unavailable; property tests will skip"
+
+echo "== tier-1 tests"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "== 3-round simulate smoke (one per aggregation policy)"
+for policy in flat tree async; do
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m repro.launch.simulate --aggregate "$policy" --rounds 3
+done
+echo "CI OK"

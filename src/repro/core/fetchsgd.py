@@ -189,3 +189,28 @@ def download_bytes(cfg: FetchSGDConfig) -> int:
     counted, assuming a zero-overhead sparse encoding.
     """
     return cfg.k * 8
+
+
+def tree_upload_bytes(cfg: FetchSGDConfig, n_clients: int,
+                      fanout: int = 4) -> list[tuple[int, int]]:
+    """Per-level (n_messages, bytes) for a ``fanout``-ary aggregation tree.
+
+    Linearity lets client tables merge hierarchically: every node sends one
+    (rows x cols) table to its parent, so level ``l`` carries one message
+    per node at that level.  Total bytes exceed the flat sum
+    ``n_clients * upload_bytes`` by the internal-node forwards, but no node
+    ever receives more than ``fanout`` tables — the aggregator's fan-in
+    becomes O(1) in the cohort size.  (``repro.fed.aggregator`` realizes
+    this topology; this function is the closed-form cost.)
+    """
+    return tree_level_bytes(upload_bytes(cfg), n_clients, fanout)
+
+
+def tree_level_bytes(table_bytes: int, n: int,
+                     fanout: int = 4) -> list[tuple[int, int]]:
+    """The raw level math behind ``tree_upload_bytes`` (any message size)."""
+    levels = []
+    while n > 1:
+        levels.append((n, n * table_bytes))
+        n = -(-n // fanout)
+    return levels or [(n, n * table_bytes)]

@@ -1,0 +1,24 @@
+"""Federation runtime: round orchestration + pluggable sketch aggregation.
+
+FetchSGD's Count Sketch is *linear*, so client tables can be merged in any
+order, at any depth, and at any time.  This package turns that property
+into a runtime:
+
+* ``aggregator`` — merge policies: flat (one psum-style mean), tree
+  (hierarchical k-ary merge with per-level bytes-on-wire accounting), and
+  async (a buffer of late sketches merged with staleness-discounted
+  weights — exact up to the discount, again by linearity).
+* ``orchestrator`` — multi-round training with client dropout, straggler
+  delay models, and variable cohort size per round.
+* ``checkpoint`` — persist/restore params + ``FetchSGDState`` + round
+  counter so long runs survive restarts.
+"""
+
+from .aggregator import (AggregationStats, Aggregator,           # noqa: F401
+                         AsyncBufferedAggregator, FlatAggregator,
+                         LevelStats, TreeAggregator, make_aggregator,
+                         mesh_aggregate)
+from .checkpoint import latest_round, restore, save              # noqa: F401
+from .orchestrator import (FederationConfig, FedRunResult,       # noqa: F401
+                           Orchestrator, RoundRecord, StragglerModel,
+                           run_federated)

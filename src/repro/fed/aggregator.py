@@ -1,0 +1,281 @@
+"""Sketch aggregation policies — the merge step of FetchSGD, made pluggable.
+
+The server update in ``repro.core.fetchsgd`` consumes one thing: the mean
+of the cohort's sketch tables.  Because the Count Sketch is linear, *how*
+that mean is formed is a free choice — a flat reduction, a hierarchical
+k-ary tree, or an asynchronous buffer that folds in late arrivals with
+staleness-discounted weights.  All three produce the same table (exactly,
+up to float summation order and the staleness discount), but they move
+very different numbers of bytes over very different links, which is what
+``AggregationStats`` accounts for.
+
+Cost model (matching ``core.fetchsgd.upload_bytes``): every edge of the
+aggregation topology carries one full (rows x cols) float32 table.
+
+* flat:  every client sends straight to the server.  Total bytes =
+  ``n * table_bytes``; the server's ingress is the bottleneck (``n``
+  simultaneous tables).
+* tree:  clients are leaves of a ``fanout``-ary tree; every node forwards
+  one merged table to its parent.  Total bytes = ``(n + ceil(n/f) + ...)
+  * table_bytes`` — slightly *more* total traffic, but no node ever
+  receives more than ``fanout`` tables: root ingress drops from ``n`` to
+  ``fanout`` tables, which is the whole point of hierarchical aggregation.
+* async: same totals as flat, but contributions may arrive ``s`` rounds
+  late and are merged with weight ``discount**s``.
+
+``mesh_aggregate`` is the in-graph (shard_map) counterpart used by the
+distributed step builders in ``repro.launch.steps``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fetchsgd as F
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelStats:
+    """One level of the aggregation topology (level 0 = clients/leaves)."""
+
+    level: int
+    n_messages: int         # tables sent up from this level
+    bytes_on_wire: int      # n_messages * table_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationStats:
+    """Bytes-on-wire + contribution accounting for one round's merge."""
+
+    policy: str
+    n_fresh: int            # tables produced this round
+    n_late: int             # buffered tables folded in (async only)
+    total_weight: float     # sum of effective contribution weights
+    levels: tuple[LevelStats, ...]
+    max_staleness: int = 0  # oldest late contribution merged (rounds)
+
+    @property
+    def upload_bytes(self) -> int:
+        return sum(lv.bytes_on_wire for lv in self.levels)
+
+    @property
+    def root_ingress_tables(self) -> int:
+        """Tables received by the final merge node — the fan-in bottleneck."""
+        return self.levels[-1].n_messages if self.levels else 0
+
+
+def tree_levels(n: int, fanout: int, table_bytes: int) -> tuple[LevelStats, ...]:
+    """Per-level message counts for a ``fanout``-ary merge of ``n`` leaves.
+
+    Every node (including leaves) sends exactly one table to its parent;
+    the root sends nothing.  The level math lives in
+    ``core.fetchsgd.tree_level_bytes`` (single source of truth for the
+    accounting in both packages).
+    """
+    return tuple(LevelStats(level=lv, n_messages=msgs, bytes_on_wire=bts)
+                 for lv, (msgs, bts) in
+                 enumerate(F.tree_level_bytes(table_bytes, n, fanout)))
+
+
+class Aggregator:
+    """Base: merge a round's client sketch tables into one mean table."""
+
+    name = "base"
+
+    def __init__(self, cfg: F.FetchSGDConfig):
+        self.cfg = cfg
+        self.table_bytes = F.upload_bytes(cfg)
+
+    def _zeros(self) -> jax.Array:
+        return jnp.zeros((self.cfg.rows, self.cfg.cols), jnp.float32)
+
+    def aggregate(self, tables: Sequence[jax.Array], *,
+                  weights: Sequence[float] | None = None,
+                  round_idx: int = 0) -> tuple[jax.Array, AggregationStats]:
+        raise NotImplementedError
+
+    @staticmethod
+    def _weighted(tables, weights):
+        if weights is None:
+            weights = [1.0] * len(tables)
+        if len(weights) != len(tables):
+            raise ValueError(f"{len(tables)} tables vs {len(weights)} weights")
+        return list(tables), [float(w) for w in weights]
+
+
+class FlatAggregator(Aggregator):
+    """Every client sends to the server; one weighted mean (current psum)."""
+
+    name = "flat"
+
+    def aggregate(self, tables, *, weights=None, round_idx=0):
+        tables, weights = self._weighted(tables, weights)
+        total_w = sum(weights)
+        acc = self._zeros()
+        for t, w in zip(tables, weights):
+            acc = acc + (t if w == 1.0 else w * t)
+        table = acc / total_w if total_w > 0 else acc
+        stats = AggregationStats(
+            policy=self.name, n_fresh=len(tables), n_late=0,
+            total_weight=total_w,
+            levels=(LevelStats(0, len(tables),
+                               len(tables) * self.table_bytes),))
+        return table, stats
+
+
+class TreeAggregator(Aggregator):
+    """Hierarchical ``fanout``-ary merge with per-level bandwidth accounting.
+
+    Linearity makes the tree-ordered sum equal to the flat sum (bitwise up
+    to float associativity); what changes is the topology: no node ever
+    merges more than ``fanout`` tables, so aggregator fan-in stays O(1) in
+    the cohort size.
+    """
+
+    name = "tree"
+
+    def __init__(self, cfg: F.FetchSGDConfig, fanout: int = 4):
+        super().__init__(cfg)
+        if fanout < 2:
+            raise ValueError(f"fanout must be >= 2, got {fanout}")
+        self.fanout = fanout
+
+    def aggregate(self, tables, *, weights=None, round_idx=0):
+        tables, weights = self._weighted(tables, weights)
+        total_w = sum(weights)
+        nodes = [t if w == 1.0 else w * t for t, w in zip(tables, weights)]
+        while len(nodes) > 1:
+            nodes = [sum(nodes[i:i + self.fanout][1:],
+                         start=nodes[i])
+                     for i in range(0, len(nodes), self.fanout)]
+        acc = nodes[0] if nodes else self._zeros()
+        table = acc / total_w if total_w > 0 else acc
+        stats = AggregationStats(
+            policy=self.name, n_fresh=len(tables), n_late=0,
+            total_weight=total_w,
+            levels=tree_levels(len(tables), self.fanout, self.table_bytes))
+        return table, stats
+
+
+class AsyncBufferedAggregator(Aggregator):
+    """Buffer late sketches; merge them with staleness-discounted weights.
+
+    A client that finishes ``s`` rounds late still contributes — its table
+    is folded into round ``r`` with weight ``discount**s``.  By linearity
+    this is *exact*: the merged table is the sketch of the identically
+    discount-weighted mean gradient.  With no late arrivals the merge
+    order (and hence the result, bitwise) is identical to
+    ``FlatAggregator``.
+    """
+
+    name = "async"
+
+    def __init__(self, cfg: F.FetchSGDConfig, discount: float = 0.9,
+                 max_staleness: int = 8):
+        super().__init__(cfg)
+        if not 0.0 < discount <= 1.0:
+            raise ValueError(f"discount must be in (0, 1], got {discount}")
+        self.discount = discount
+        self.max_staleness = max_staleness
+        self._buffer: list[dict] = []   # {table, produced, arrival, weight}
+
+    def submit(self, table: jax.Array, *, produced_round: int,
+               arrival_round: int, weight: float = 1.0) -> None:
+        """Enqueue a straggler's table to be merged once it 'arrives'."""
+        if arrival_round <= produced_round:
+            raise ValueError("arrival_round must be > produced_round")
+        self._buffer.append(dict(table=table, produced=produced_round,
+                                 arrival=arrival_round, weight=float(weight)))
+
+    def pending(self) -> int:
+        return len(self._buffer)
+
+    def state(self) -> list[dict]:
+        """Buffer contents for checkpointing (see ``fed.checkpoint``)."""
+        return [dict(e) for e in self._buffer]
+
+    def load_state(self, entries: list[dict]) -> None:
+        """Restore a checkpointed buffer (replaces current contents)."""
+        self._buffer = [dict(table=e["table"],
+                             produced=int(e["produced"]),
+                             arrival=int(e["arrival"]),
+                             weight=float(e["weight"])) for e in entries]
+
+    def drain(self, round_idx: int) -> tuple[jax.Array, float, int, int]:
+        """Pop arrived entries: (discounted weighted sum, weight, n, max_s).
+
+        Entries staler than ``max_staleness`` are dropped on the floor —
+        their gradient direction is too old to help.
+        """
+        acc, total_w, n, max_s = self._zeros(), 0.0, 0, 0
+        keep = []
+        for e in self._buffer:
+            if e["arrival"] > round_idx:
+                keep.append(e)
+                continue
+            s = round_idx - e["produced"]
+            if s > self.max_staleness:
+                continue
+            w = e["weight"] * self.discount ** s
+            acc = acc + w * e["table"]
+            total_w += w
+            n += 1
+            max_s = max(max_s, s)
+        self._buffer = keep
+        return acc, total_w, n, max_s
+
+    def aggregate(self, tables, *, weights=None, round_idx=0):
+        tables, weights = self._weighted(tables, weights)
+        late_sum, late_w, n_late, max_s = self.drain(round_idx)
+        acc = self._zeros()
+        for t, w in zip(tables, weights):
+            acc = acc + (t if w == 1.0 else w * t)
+        total_w = sum(weights) + late_w
+        acc = acc + late_sum if n_late else acc
+        table = acc / total_w if total_w > 0 else acc
+        n = len(tables) + n_late
+        stats = AggregationStats(
+            policy=self.name, n_fresh=len(tables), n_late=n_late,
+            total_weight=total_w, max_staleness=max_s,
+            levels=(LevelStats(0, n, n * self.table_bytes),))
+        return table, stats
+
+
+def make_aggregator(policy: str, cfg: F.FetchSGDConfig, *, fanout: int = 4,
+                    discount: float = 0.9,
+                    max_staleness: int = 8) -> Aggregator:
+    if policy == "flat":
+        return FlatAggregator(cfg)
+    if policy == "tree":
+        return TreeAggregator(cfg, fanout=fanout)
+    if policy == "async":
+        return AsyncBufferedAggregator(cfg, discount=discount,
+                                       max_staleness=max_staleness)
+    raise ValueError(f"unknown aggregation policy {policy!r}")
+
+
+# -- in-graph (shard_map) counterpart ----------------------------------------
+
+def mesh_aggregate(table: jax.Array, axes: tuple[str, ...],
+                   policy: str = "flat") -> jax.Array:
+    """Mean the per-shard sketch table over the manual mesh axes.
+
+    ``flat`` is one collective over all client axes at once.  ``tree``
+    reduces hierarchically — innermost axis first (intra-pod ICI), then
+    outward (cross-pod DCN) — the mesh realization of ``TreeAggregator``:
+    same mean (every axis has fixed size, so the mean of per-axis means is
+    the overall mean), but each collective spans one link class.
+    """
+    if not axes:
+        return table
+    if policy == "flat":
+        return jax.lax.pmean(table, axes)
+    if policy == "tree":
+        for ax in reversed(axes):
+            table = jax.lax.pmean(table, (ax,))
+        return table
+    raise ValueError(f"unknown mesh aggregation policy {policy!r}")

@@ -1,0 +1,144 @@
+"""Checkpointing for long federated runs: params + FetchSGDState + round.
+
+Plain ``.npz`` + JSON sidecar — no external checkpoint deps.  Parameter
+leaves are stored in ``jax.tree_util`` flatten order, so restore needs a
+same-structure template pytree (the orchestrator always has one: its
+freshly-initialized params).  The sidecar carries the round counter and
+free-form metadata for humans / resume logic.  The async aggregator's
+late-sketch buffer is persisted alongside, so an async run resumed from a
+checkpoint replays exactly like an uninterrupted one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import fetchsgd as F
+
+_CKPT_RE = re.compile(r"^ckpt_(\d{8})\.npz$")
+
+
+@dataclasses.dataclass
+class Checkpoint:
+    """One restored checkpoint."""
+
+    params: Any
+    opt_state: F.FetchSGDState
+    round_idx: int
+    extra: dict
+    late_buffer: list       # AsyncBufferedAggregator.state() entries
+
+
+def _paths(directory: str, round_idx: int) -> tuple[str, str]:
+    stem = os.path.join(directory, f"ckpt_{round_idx:08d}")
+    return stem + ".npz", stem + ".json"
+
+
+def latest_round(directory: str) -> int | None:
+    """Highest round with a complete (npz + json) checkpoint, or None."""
+    if not os.path.isdir(directory):
+        return None
+    rounds = []
+    for name in os.listdir(directory):
+        m = _CKPT_RE.match(name)
+        if m and os.path.exists(_paths(directory, int(m.group(1)))[1]):
+            rounds.append(int(m.group(1)))
+    return max(rounds) if rounds else None
+
+
+def save(directory: str, params, opt_state: F.FetchSGDState,
+         round_idx: int, *, extra: dict | None = None,
+         late_buffer: list | None = None, keep: int = 3) -> str:
+    """Write one checkpoint; prune to the newest ``keep``. Returns npz path.
+
+    ``late_buffer`` is ``AsyncBufferedAggregator.state()``: each entry's
+    table goes in the npz, its (produced, arrival, weight) in the sidecar.
+    """
+    os.makedirs(directory, exist_ok=True)
+    leaves = jax.tree_util.tree_leaves(params)
+    arrays = {f"param_{i:05d}": np.asarray(v) for i, v in enumerate(leaves)}
+    arrays["momentum_sketch"] = np.asarray(opt_state.momentum_sketch)
+    arrays["error_sketch"] = np.asarray(opt_state.error_sketch)
+    arrays["opt_step"] = np.asarray(opt_state.step)
+    late_meta = []
+    for i, e in enumerate(late_buffer or []):
+        arrays[f"late_{i:05d}"] = np.asarray(e["table"])
+        late_meta.append({"produced": int(e["produced"]),
+                          "arrival": int(e["arrival"]),
+                          "weight": float(e["weight"])})
+    npz, meta = _paths(directory, round_idx)
+    tmp = npz + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, npz)
+    with open(meta, "w") as f:
+        json.dump({"round": round_idx, "n_param_leaves": len(leaves),
+                   "late": late_meta, "extra": extra or {}}, f, indent=1)
+    _prune(directory, keep)
+    return npz
+
+
+def restore(directory: str, params_template, state_template: F.FetchSGDState,
+            round_idx: int | None = None) -> Checkpoint | None:
+    """Load a ``Checkpoint``; None if none exists.
+
+    ``params_template``/``state_template`` supply the pytree structure and
+    dtypes; shapes are checked so a config mismatch fails loudly instead of
+    silently reinterpreting leaves.
+    """
+    if round_idx is None:
+        round_idx = latest_round(directory)
+        if round_idx is None:
+            return None
+    npz, meta = _paths(directory, round_idx)
+    if not (os.path.exists(npz) and os.path.exists(meta)):
+        return None
+    with open(meta) as f:
+        info = json.load(f)
+    leaves, treedef = jax.tree_util.tree_flatten(params_template)
+    if info["n_param_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint has {info['n_param_leaves']} param leaves, "
+            f"template has {len(leaves)} — wrong model config?")
+    with np.load(npz) as data:
+        new_leaves = []
+        for i, tmpl in enumerate(leaves):
+            arr = data[f"param_{i:05d}"]
+            if arr.shape != tuple(tmpl.shape):
+                raise ValueError(f"param leaf {i}: checkpoint shape "
+                                 f"{arr.shape} != template {tmpl.shape}")
+            new_leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+        ms = data["momentum_sketch"]
+        if ms.shape != tuple(state_template.momentum_sketch.shape):
+            raise ValueError(f"sketch shape {ms.shape} != "
+                             f"{state_template.momentum_sketch.shape} — "
+                             f"wrong FetchSGDConfig?")
+        state = F.FetchSGDState(
+            momentum_sketch=jax.numpy.asarray(ms),
+            error_sketch=jax.numpy.asarray(data["error_sketch"]),
+            step=jax.numpy.asarray(data["opt_step"]))
+        late_buffer = [
+            dict(table=jax.numpy.asarray(data[f"late_{i:05d}"]), **e)
+            for i, e in enumerate(info.get("late", []))]
+    params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return Checkpoint(params=params, opt_state=state,
+                      round_idx=int(info["round"]),
+                      extra=info.get("extra", {}), late_buffer=late_buffer)
+
+
+def _prune(directory: str, keep: int) -> None:
+    rounds = sorted(r for r in (int(m.group(1))
+                    for m in (_CKPT_RE.match(n) for n in os.listdir(directory))
+                    if m))
+    for r in rounds[:-keep] if keep > 0 else []:
+        for path in _paths(directory, r):
+            try:
+                os.remove(path)
+            except OSError:
+                pass

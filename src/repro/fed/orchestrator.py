@@ -1,0 +1,262 @@
+"""Round orchestration: cohorts, dropout, stragglers, aggregation, resume.
+
+The orchestrator owns the outer federated loop that ``launch/simulate.py``
+previously hard-coded for FetchSGD: sample a (possibly variable-size)
+cohort, compute per-client sketches, push them through a pluggable
+``Aggregator``, run the server update, and keep the communication ledger.
+On top it adds the failure modes real federations see:
+
+* **dropout** — a sampled client never reports (its sketch is lost);
+* **stragglers** — a sampled client reports ``delay`` rounds late.  Under
+  flat/tree aggregation the synchronous round barrier misses it (counted
+  as dropped); under async aggregation it lands in the buffer and is
+  merged later with a staleness-discounted weight.
+
+Both are driven by a per-(seed, round, client) RNG so runs are exactly
+reproducible — including across a checkpoint restore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression, fetchsgd as F
+from repro.core import layout as layout_lib
+from repro.data import federated
+from repro.models import transformer
+from repro.optim import triangular
+
+from . import aggregator as agg_lib
+from . import checkpoint as ckpt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerModel:
+    """Per-client failure model, sampled i.i.d. each round."""
+
+    dropout_prob: float = 0.0    # client never reports
+    straggle_prob: float = 0.0   # client reports late
+    max_delay: int = 3           # late arrival delay ~ uniform[1, max_delay]
+
+    def __post_init__(self):
+        if self.dropout_prob + self.straggle_prob > 1.0:
+            raise ValueError("dropout_prob + straggle_prob must be <= 1")
+        if self.max_delay < 1:
+            raise ValueError("max_delay must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationConfig:
+    """Static configuration of a federated run."""
+
+    rounds: int = 30
+    clients_per_round: int = 4
+    min_clients_per_round: int | None = None  # variable cohort if set
+    aggregate: str = "flat"                   # flat | tree | async
+    tree_fanout: int = 4
+    staleness_discount: float = 0.9
+    max_staleness: int = 8
+    straggler: StragglerModel = StragglerModel()
+    seed: int = 0
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 0                 # 0 = only if dir set: final round
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """What actually happened in one round."""
+
+    round_idx: int
+    cohort: list[int]
+    loss: float | None
+    n_fresh: int
+    n_late: int
+    n_dropped: int
+    n_straggling: int     # produced this round, arriving later
+    upload_bytes: int
+
+
+@dataclasses.dataclass
+class FedRunResult:
+    losses: list            # per-round mean client loss (None if no clients)
+    records: list           # RoundRecord per round
+    traffic: dict           # TrafficMeter.compression(...)
+    params: Any
+    opt_state: F.FetchSGDState
+    extras: dict
+
+
+def make_grad_fn(cfg) -> Callable:
+    """Jitted (params, batch) -> (loss, grads) for the transformer LM."""
+
+    @jax.jit
+    def gf(params, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: transformer.loss_fn(p, batch, cfg, remat=False),
+            has_aux=True)(params)
+        return loss, grads
+    return gf
+
+
+def _round_rng(seed: int, round_idx: int,
+               stream: int = 0) -> np.random.Generator:
+    # tuple entropy goes through SeedSequence mixing — adjacent (seed, round,
+    # stream) triples give independent streams.  Cohort sizing and client
+    # fates use distinct streams so the two draws never correlate.
+    return np.random.default_rng((seed, round_idx, stream))
+
+
+class Orchestrator:
+    """Drives multi-round FetchSGD training through an aggregation policy."""
+
+    def __init__(self, model_cfg, fs_cfg: F.FetchSGDConfig,
+                 fed_cfg: FederationConfig, dataset, *,
+                 params=None, lr_fn: Callable | None = None,
+                 peak_lr: float = 0.2, grad_fn: Callable | None = None):
+        self.model_cfg = model_cfg
+        self.fs_cfg = fs_cfg
+        self.fed_cfg = fed_cfg
+        self.dataset = dataset
+        self.layout = None
+        self.params = (params if params is not None else
+                       transformer.init_params(model_cfg,
+                                               jax.random.PRNGKey(fed_cfg.seed)))
+        self.layout = layout_lib.build_layout(self.params)
+        self.opt_state = F.init_state(fs_cfg)
+        self.start_round = 0
+        self.lr_fn = lr_fn or triangular(peak_lr, fed_cfg.rounds)
+        self.grad_fn = grad_fn or make_grad_fn(model_cfg)
+        self.aggregator = agg_lib.make_aggregator(
+            fed_cfg.aggregate, fs_cfg, fanout=fed_cfg.tree_fanout,
+            discount=fed_cfg.staleness_discount,
+            max_staleness=fed_cfg.max_staleness)
+        self.meter = compression.TrafficMeter(d=self.layout.total)
+
+        lay, cfg = self.layout, fs_cfg
+        self._sketch = jax.jit(lambda g: F.sketch_grads(g, lay, cfg))
+        self._server = jax.jit(
+            lambda t, st, lr: F.server_step(t, st, lr, lay, cfg))
+        self._apply = jax.jit(lambda p, d: F.apply_delta(p, lay, d))
+
+        if fed_cfg.checkpoint_dir:
+            restored = ckpt_lib.restore(fed_cfg.checkpoint_dir, self.params,
+                                        self.opt_state)
+            if restored is not None:
+                self.params = restored.params
+                self.opt_state = restored.opt_state
+                self.start_round = restored.round_idx + 1
+                if isinstance(self.aggregator,
+                              agg_lib.AsyncBufferedAggregator):
+                    self.aggregator.load_state(restored.late_buffer)
+
+    # -- per-round pieces ---------------------------------------------------
+
+    def _cohort(self, r: int) -> np.ndarray:
+        fc = self.fed_cfg
+        w = fc.clients_per_round
+        if fc.min_clients_per_round is not None:
+            w = int(_round_rng(fc.seed, r).integers(
+                fc.min_clients_per_round, fc.clients_per_round + 1))
+        return federated.sample_clients(self.dataset.n_clients, w, r, fc.seed)
+
+    def _fate(self, rng: np.random.Generator) -> tuple[str, int]:
+        """(fresh|late|dropped, delay) for one sampled client."""
+        sm = self.fed_cfg.straggler
+        u = rng.random()
+        if u < sm.dropout_prob:
+            return "dropped", 0
+        if u < sm.dropout_prob + sm.straggle_prob:
+            return "late", int(rng.integers(1, sm.max_delay + 1))
+        return "fresh", 0
+
+    def run_round(self, r: int) -> RoundRecord:
+        fc = self.fed_cfg
+        clients = self._cohort(r)
+        rng = _round_rng(fc.seed, r, stream=1)
+        is_async = isinstance(self.aggregator, agg_lib.AsyncBufferedAggregator)
+
+        fresh, losses, n_dropped, n_straggling = [], [], 0, 0
+        for c in clients:
+            fate, delay = self._fate(rng)
+            if fate == "dropped":
+                n_dropped += 1
+                continue
+            batch = {k: jnp.asarray(v) for k, v in
+                     self.dataset.client_batch(int(c)).items()
+                     if k in ("tokens", "labels")}
+            loss, grads = self.grad_fn(self.params, batch)
+            table = self._sketch(grads)
+            losses.append(float(loss))
+            if fate == "late":
+                if is_async:
+                    self.aggregator.submit(table, produced_round=r,
+                                           arrival_round=r + delay)
+                    n_straggling += 1
+                else:  # sync barrier: a late client is a lost client
+                    n_dropped += 1
+                continue
+            fresh.append(table)
+
+        table, stats = self.aggregator.aggregate(fresh, round_idx=r)
+        if stats.total_weight > 0:
+            delta, self.opt_state = self._server(table, self.opt_state,
+                                                 self.lr_fn(r))
+            self.params = self._apply(self.params, delta)
+        # paper accounting (compression.fetchsgd_round): k values at 4 bytes
+        # each per participating client — matching the other simulate methods
+        per_client_down = compression.fetchsgd_round(
+            self.fs_cfg.rows, self.fs_cfg.cols, self.fs_cfg.k).download
+        self.meter.record(compression.RoundTraffic(
+            upload=stats.upload_bytes,
+            download=per_client_down * (len(fresh) + n_straggling)),
+            clients=1)
+        return RoundRecord(
+            round_idx=r, cohort=[int(c) for c in clients],
+            loss=(sum(losses) / len(losses)) if losses else None,
+            n_fresh=stats.n_fresh, n_late=stats.n_late, n_dropped=n_dropped,
+            n_straggling=n_straggling, upload_bytes=stats.upload_bytes)
+
+    # -- driver -------------------------------------------------------------
+
+    def run(self, progress: Callable[[RoundRecord], None] | None = None
+            ) -> FedRunResult:
+        fc = self.fed_cfg
+        records = []
+        for r in range(self.start_round, fc.rounds):
+            rec = self.run_round(r)
+            records.append(rec)
+            if progress:
+                progress(rec)
+            if fc.checkpoint_dir and (
+                    (fc.checkpoint_every and (r + 1) % fc.checkpoint_every == 0)
+                    or r == fc.rounds - 1):
+                late = (self.aggregator.state()
+                        if isinstance(self.aggregator,
+                                      agg_lib.AsyncBufferedAggregator)
+                        else None)
+                ckpt_lib.save(fc.checkpoint_dir, self.params, self.opt_state,
+                              r, extra={"aggregate": fc.aggregate},
+                              late_buffer=late)
+        return FedRunResult(
+            losses=[rec.loss for rec in records], records=records,
+            traffic=self.meter.compression(fc.clients_per_round),
+            params=self.params, opt_state=self.opt_state,
+            extras={"fs_cfg": self.fs_cfg, "fed_cfg": fc,
+                    "pending_late": (self.aggregator.pending()
+                                     if isinstance(self.aggregator,
+                                                   agg_lib.AsyncBufferedAggregator)
+                                     else 0),
+                    "start_round": self.start_round})
+
+
+def run_federated(model_cfg, dataset, *, fs_cfg: F.FetchSGDConfig,
+                  fed_cfg: FederationConfig, peak_lr: float = 0.2,
+                  params=None, progress=None) -> FedRunResult:
+    """One-call convenience wrapper around ``Orchestrator``."""
+    return Orchestrator(model_cfg, fs_cfg, fed_cfg, dataset, params=params,
+                        peak_lr=peak_lr).run(progress=progress)

@@ -1,12 +1,13 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
+from repro.xla_env import force_host_devices
+
+force_host_devices(512)
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
 
 The two lines above MUST precede any other import (jax locks the device
-count on first init); 512 placeholder host devices let ``jax.make_mesh``
-build the production meshes: 16x16 (one v5e pod) and 2x16x16 (two pods).
+count on first init; ``repro.xla_env`` touches only the stdlib); 512
+placeholder host devices let ``jax.make_mesh`` build the production
+meshes: 16x16 (one v5e pod) and 2x16x16 (two pods).
 
 For each combination this prints ``memory_analysis()`` (proves the program
 fits per-chip), ``cost_analysis()`` (FLOPs/bytes for §Roofline), and the
@@ -22,6 +23,7 @@ Usage:
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback

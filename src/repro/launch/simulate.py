@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import fed
 from repro.baselines import fedavg, local_topk, uncompressed
 from repro.core import compression, fetchsgd as F
 from repro.core import layout as layout_lib
@@ -34,14 +35,9 @@ class SimResult:
     extras: dict
 
 
-def _grad_fn(cfg):
-    @jax.jit
-    def gf(params, batch):
-        (loss, _), grads = jax.value_and_grad(
-            lambda p: transformer.loss_fn(p, batch, cfg, remat=False),
-            has_aux=True)(params)
-        return loss, grads
-    return gf
+# one canonical jitted (params, batch) -> (loss, grads); the federation
+# runtime owns it so the orchestrator default and this module never diverge
+_grad_fn = fed.orchestrator.make_grad_fn
 
 
 def _client_batches(dataset, clients, pad_to):
@@ -78,7 +74,8 @@ def run_simulation(cfg, *, method: str = "fetchsgd", rounds: int = 30,
                    topk_cfg: local_topk.LocalTopKConfig | None = None,
                    fa_cfg: fedavg.FedAvgConfig | None = None,
                    dataset=None, seed: int = 0,
-                   eval_every: int = 1) -> SimResult:
+                   eval_every: int = 1, aggregate: str = "flat",
+                   fed_cfg: fed.FederationConfig | None = None) -> SimResult:
     dataset = dataset or synthetic.ClassShardLM(
         vocab=cfg.vocab, seq_len=32, n_classes=8, n_clients=256,
         samples_per_client=4, seed=seed)
@@ -91,30 +88,26 @@ def run_simulation(cfg, *, method: str = "fetchsgd", rounds: int = 30,
     losses, extras = [], {}
 
     if method == "fetchsgd":
+        # the federation runtime owns the round loop: cohort sampling,
+        # dropout/stragglers, and the pluggable aggregation policy
+        # (flat = the old inline mean; tree/async exercise linearity).
         fs_cfg = fs_cfg or F.FetchSGDConfig(rows=5, cols=1 << 14, k=512,
                                             momentum=0.9)
-        st = F.init_state(fs_cfg)
-        sketch_j = jax.jit(lambda g: F.sketch_grads(g, lay, fs_cfg))
-        server_j = jax.jit(
-            lambda t, st, lr: F.server_step(t, st, lr, lay, fs_cfg))
-        apply_j = jax.jit(lambda p, d: F.apply_delta(p, lay, d))
-        for r in range(rounds):
-            clients = federated.sample_clients(dataset.n_clients,
-                                               clients_per_round, r, seed)
-            # linearity: mean of client sketches == sketch of mean gradient
-            tables, loss_acc = [], 0.0
-            for cb in _client_batches(dataset, clients, None):
-                loss, grads = gf(params, _to_jnp(cb))
-                tables.append(sketch_j(grads))
-                loss_acc += float(loss)
-            agg = sum(tables) / len(tables)
-            delta, st = server_j(agg, st, lr_fn(r))
-            params = apply_j(params, delta)
-            losses.append(loss_acc / len(tables))
-            meter.record(compression.fetchsgd_round(fs_cfg.rows, fs_cfg.cols,
-                                                    fs_cfg.k),
-                         clients_per_round)
+        fed_cfg = fed_cfg or fed.FederationConfig(
+            rounds=rounds, clients_per_round=clients_per_round,
+            aggregate=aggregate, seed=seed)
+        if fed_cfg.rounds != rounds:   # fed_cfg wins; keep the lr schedule
+            lr_fn = triangular(peak_lr, fed_cfg.rounds)   # aligned with it
+        res = fed.Orchestrator(cfg, fs_cfg, fed_cfg, dataset,
+                               params=params, lr_fn=lr_fn,
+                               grad_fn=gf).run()
         extras["fs_cfg"] = fs_cfg
+        extras["fed_records"] = res.records
+        extras["pending_late"] = res.extras["pending_late"]
+        return SimResult(method=method,
+                         losses=[l if l is not None else float("nan")
+                                 for l in res.losses],
+                         traffic=res.traffic, extras=extras)
 
     elif method == "true_topk":
         # Appendix A.3 Fig. 10: full gradients to the server; server keeps a
@@ -217,6 +210,72 @@ def SparseOnes(delta: TK.SparseDelta) -> TK.SparseDelta:
                           values=jnp.ones_like(delta.values), k=delta.k)
 
 
+def main(argv=None):
+    """CLI smoke driver: micro-config federated runs on CPU.
+
+        PYTHONPATH=src python -m repro.launch.simulate \
+            --aggregate tree --rounds 5
+    """
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--method", default="fetchsgd",
+                    choices=("fetchsgd", "true_topk", "local_topk", "fedavg",
+                             "uncompressed"))
+    ap.add_argument("--aggregate", default="flat",
+                    choices=("flat", "tree", "async"))
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--clients-per-round", type=int, default=4)
+    ap.add_argument("--min-clients-per-round", type=int, default=None)
+    ap.add_argument("--tree-fanout", type=int, default=2)
+    ap.add_argument("--dropout-prob", type=float, default=0.0)
+    ap.add_argument("--straggle-prob", type=float, default=0.0)
+    ap.add_argument("--max-delay", type=int, default=2)
+    ap.add_argument("--staleness-discount", type=float, default=0.9)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--peak-lr", type=float, default=0.2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = micro_cfg()
+    dataset = micro_dataset(cfg, seed=args.seed)
+    fed_cfg = fed.FederationConfig(
+        rounds=args.rounds, clients_per_round=args.clients_per_round,
+        min_clients_per_round=args.min_clients_per_round,
+        aggregate=args.aggregate, tree_fanout=args.tree_fanout,
+        staleness_discount=args.staleness_discount,
+        straggler=fed.StragglerModel(dropout_prob=args.dropout_prob,
+                                     straggle_prob=args.straggle_prob,
+                                     max_delay=args.max_delay),
+        seed=args.seed, checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every)
+    res = run_simulation(cfg, method=args.method, rounds=args.rounds,
+                         clients_per_round=args.clients_per_round,
+                         peak_lr=args.peak_lr, dataset=dataset,
+                         seed=args.seed, aggregate=args.aggregate,
+                         fed_cfg=fed_cfg if args.method == "fetchsgd"
+                         else None)
+    print(f"method={args.method} aggregate={args.aggregate}")
+    if not res.losses:
+        print(f"nothing to do: checkpoint in {args.checkpoint_dir} already "
+              f"covers all {args.rounds} rounds")
+        return res
+    for r, loss in enumerate(res.losses):
+        rec = (res.extras.get("fed_records") or [None] * len(res.losses))[r]
+        detail = (f"  fresh={rec.n_fresh} late={rec.n_late} "
+                  f"dropped={rec.n_dropped}" if rec else "")
+        print(f"round {rec.round_idx if rec else r}: "
+              f"loss {loss:.4f}{detail}")
+    t = res.traffic
+    print(f"traffic: up={t['upload_bytes']/1e6:.2f}MB "
+          f"down={t['download_bytes']/1e6:.2f}MB "
+          f"compression {t['total_x']:.1f}x")
+    assert np.isfinite(res.losses[-1]), \
+        "non-finite final loss (diverged, or no client participated)"
+    return res
+
+
 @functools.lru_cache(maxsize=8)
 def _true_topk_jit(lay, fs_cfg):
     @jax.jit
@@ -232,3 +291,7 @@ def _true_topk_jit(lay, fs_cfg):
         mom = jax.tree.map(lambda m, ms: m * (1 - ms), mom, mask)
         return mom, err, params
     return f
+
+
+if __name__ == "__main__":
+    main()

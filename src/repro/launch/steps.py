@@ -30,11 +30,34 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import fetchsgd as F
 from repro.core import layout as layout_lib
+from repro.fed import aggregator as fed_agg
 from repro.models import moe, sharding, transformer
 from repro.models.config import ArchConfig
 from .shapes import ShapeSpec
 
 CACHE_DTYPE = jnp.bfloat16
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, axis_names, check_vma=False):
+    """jax.shard_map with a fallback to the pre-0.5 experimental API.
+
+    Old jax exposes shard_map under jax.experimental with ``check_rep``
+    instead of ``check_vma`` and an ``auto`` set (the complement of
+    ``axis_names``) instead of the manual-axis set.  There the Shardy
+    partitioner must also be switched on explicitly: the default GSPMD
+    partitioner check-fails (``sharding.IsManualSubgroup()``) on
+    ``lax.scan`` inside a partially-auto region, which every train step
+    hits via ``sketch_grads``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map
+    jax.config.update("jax_use_shardy_partitioner", True)
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma, auto=auto)
 
 
 # -- plumbing --------------------------------------------------------------------
@@ -154,10 +177,28 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
                     aggregate: str = "sketch",
                     sketch_mode: str = "gathered",
                     donate: bool = False) -> StepBundle:
-    """FetchSGD train step (aggregate='sketch') or dense-psum baseline.
+    """FetchSGD train step, parameterized by sketch aggregation policy.
 
-    Returns fn(params, opt_state, batch, lr) -> (params, opt_state, metrics).
+    ``aggregate`` selects how client sketch tables merge (repro.fed):
+
+    * ``'sketch'`` / ``'flat'`` — one pmean over all client axes;
+    * ``'tree'``   — hierarchical per-axis reduction (intra-pod ICI first,
+      then cross-pod), ``fed.aggregator.mesh_aggregate`` policy 'tree';
+    * ``'async'``  — flat merge of the in-step cohort plus a host-injected
+      buffer of staleness-discounted late tables.  The step takes three
+      extra args ``(fresh_weight, inject_table, inject_weight)`` and
+      returns the fresh aggregated table in ``metrics['table']`` so the
+      host driver (``train.py`` + ``fed.AsyncBufferedAggregator``) can
+      buffer delayed rounds;
+    * ``'dense'``  — psum the full d-dim gradient (roofline baseline).
+
+    Returns fn(params, opt_state, batch, lr[, fresh_w, inject, inject_w])
+    -> (params, opt_state, metrics).
     """
+    if aggregate == "flat":
+        aggregate = "sketch"
+    if aggregate not in ("sketch", "tree", "async", "dense"):
+        raise ValueError(f"unknown aggregate policy {aggregate!r}")
     axes = manual_axes(mesh)
     p_sds, p_shard = param_structs(cfg, mesh)
     b_sds, b_shard = batch_structs(cfg, shape, mesh)
@@ -179,23 +220,33 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
     if cfg.d_model % mesh.shape["model"] == 0:
         act_sh = NamedSharding(mesh, P(None, None, "model"))
 
-    def body(params, opt_state, batch, lr):
+    def _loss_grads(params, batch):
         with moe.expert_parallel(ep_axis), \
                 sharding.activation_sharding(act_sh):
-            loss, grads = jax.value_and_grad(
+            return jax.value_and_grad(
                 lambda p: transformer.loss_fn(p, batch, cfg)[0])(params)
+
+    def _server_apply(params, opt_state, table, lr, sidx):
+        delta, new_state = F.server_step(table, opt_state, lr, layout,
+                                         fs_cfg)
+        new_params = F.apply_delta(params, layout, delta,
+                                   shard_idx=sidx, local=has_ep,
+                                   view_shardings=view_sh)
+        return new_params, new_state
+
+    def body(params, opt_state, batch, lr):
+        loss, grads = _loss_grads(params, batch)
         sidx = jax.lax.axis_index("data") if has_ep else None
-        if aggregate == "sketch":
-            # FetchSGD: the ONLY cross-client collective is (rows x cols)
+        if aggregate in ("sketch", "tree"):
+            # FetchSGD: the ONLY cross-client collective is (rows x cols);
+            # 'tree' reduces it hierarchically, one link class per level.
             table = F.sketch_grads(grads, layout, fs_cfg,
                                    shard_idx=sidx, local=has_ep,
                                    view_shardings=view_sh)
-            table = jax.lax.pmean(table, axes)
-            delta, new_state = F.server_step(table, opt_state, lr, layout,
-                                             fs_cfg)
-            new_params = F.apply_delta(params, layout, delta,
-                                       shard_idx=sidx, local=has_ep,
-                                       view_shardings=view_sh)
+            table = fed_agg.mesh_aggregate(
+                table, axes, policy="tree" if aggregate == "tree" else "flat")
+            new_params, new_state = _server_apply(params, opt_state, table,
+                                                  lr, sidx)
         elif aggregate == "dense":
             # baseline: psum the full d-dim gradient (what FetchSGD avoids);
             # EP expert grads are shard-owned and stay local.
@@ -208,14 +259,40 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
             grads = jax.tree_util.tree_map_with_path(maybe_psum, grads)
             table = F.sketch_grads(grads, layout, fs_cfg, shard_idx=sidx,
                                    local=has_ep, view_shardings=view_sh)
-            delta, new_state = F.server_step(table, opt_state, lr, layout,
-                                             fs_cfg)
-            new_params = F.apply_delta(params, layout, delta,
-                                       shard_idx=sidx, local=has_ep,
-                                       view_shardings=view_sh)
+            new_params, new_state = _server_apply(params, opt_state, table,
+                                                  lr, sidx)
         else:
             raise ValueError(aggregate)
         metrics = {"loss": jax.lax.pmean(loss, axes)}
+        return new_params, new_state, metrics
+
+    def body_async(params, opt_state, batch, lr, fresh_w, inject_table,
+                   inject_w):
+        """Flat in-step merge + staleness-discounted host buffer injection.
+
+        ``inject_table`` arrives as a discount-weighted *sum* of buffered
+        tables (total weight ``inject_w``); ``fresh_w`` is 0 when the host
+        marks this round's cohort as straggling (its table — returned in
+        metrics — will be injected into a later round instead).  With an
+        empty buffer and fresh_w=1 this reduces exactly to the flat policy.
+        A round with zero total weight leaves params and optimizer state
+        untouched (same "no new information" semantics as the
+        Orchestrator's total_weight guard).
+        """
+        loss, grads = _loss_grads(params, batch)
+        sidx = jax.lax.axis_index("data") if has_ep else None
+        table = F.sketch_grads(grads, layout, fs_cfg, shard_idx=sidx,
+                               local=has_ep, view_shardings=view_sh)
+        fresh = fed_agg.mesh_aggregate(table, axes, policy="flat")
+        total_w = fresh_w + inject_w
+        merged = (fresh_w * fresh + inject_table) / jnp.maximum(total_w,
+                                                                1e-8)
+        new_params, new_state = jax.lax.cond(
+            total_w > 0,
+            lambda ops: _server_apply(*ops, sidx),
+            lambda ops: (ops[0], ops[1]),
+            (params, opt_state, merged, lr))
+        metrics = {"loss": jax.lax.pmean(loss, axes), "table": fresh}
         return new_params, new_state, metrics
 
     opt_spec = jax.tree.map(lambda _: P(), jax.eval_shape(
@@ -226,8 +303,14 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
             cfg, mesh, axes, fs_cfg, layout, has_ep, ep_axis, act_sh,
             view_sh, ml_modes, ml_specs, p_manual, b_manual, opt_spec,
             p_structs)
+    elif aggregate == "async":
+        sm = _shard_map(
+            body_async, mesh=mesh,
+            in_specs=(p_manual, opt_spec, b_manual, P(), P(), P(), P()),
+            out_specs=(p_manual, opt_spec, {"loss": P(), "table": P()}),
+            axis_names=set(axes), check_vma=False)
     else:
-        sm = jax.shard_map(
+        sm = _shard_map(
             body, mesh=mesh,
             in_specs=(p_manual, opt_spec, b_manual, P()),
             out_specs=(p_manual, opt_spec, {"loss": P()}),
@@ -241,8 +324,13 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
                                 jax.eval_shape(functools.partial(F.init_state,
                                                                  fs_cfg))))
     lr_sds = jax.ShapeDtypeStruct((), jnp.float32)
-    return StepBundle(fn=fn, inputs=(p_sds, opt_sds, b_sds, lr_sds),
-                      layout=layout)
+    inputs = (p_sds, opt_sds, b_sds, lr_sds)
+    if aggregate == "async":
+        inputs += (jax.ShapeDtypeStruct((), jnp.float32),
+                   jax.ShapeDtypeStruct((fs_cfg.rows, fs_cfg.cols),
+                                        jnp.float32),
+                   jax.ShapeDtypeStruct((), jnp.float32))
+    return StepBundle(fn=fn, inputs=inputs, layout=layout)
 
 
 # -- serve steps -----------------------------------------------------------------
@@ -264,7 +352,7 @@ def make_prefill_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
             logits, new_cache = transformer.prefill(params, batch, cfg, cache)
         return logits, new_cache
 
-    sm = jax.shard_map(
+    sm = _shard_map(
         body, mesh=mesh,
         in_specs=(_specs(p_shard, axes), _specs(b_shard, axes),
                   _specs(c_shard, axes)),
@@ -292,7 +380,7 @@ def make_decode_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
                                                         cache)
         return logits, new_cache
 
-    sm = jax.shard_map(
+    sm = _shard_map(
         body, mesh=mesh,
         in_specs=(_specs(p_shard, axes), _specs(b_shard, axes)["tokens"],
                   _specs(c_shard, axes)),
@@ -347,7 +435,7 @@ def _model_local_pipeline(cfg, mesh, axes, fs_cfg, layout, has_ep, ep_axis,
     g_out_specs = tuple(
         P(sa if sa else None, *spec)
         for sa, spec in zip(stack_axes, p_manual_leaves))
-    sm_grads = jax.shard_map(
+    sm_grads = _shard_map(
         grads_body, mesh=mesh, in_specs=(p_manual, b_manual),
         out_specs=(P(), g_out_specs), axis_names=set(axes), check_vma=False)
 
@@ -367,7 +455,7 @@ def _model_local_pipeline(cfg, mesh, axes, fs_cfg, layout, has_ep, ep_axis,
         tbl = jax.lax.psum(tbl, ("model",))
         return jax.lax.pmean(tbl, axes)
 
-    sm_sketch = jax.shard_map(
+    sm_sketch = _shard_map(
         sketch_body, mesh=mesh, in_specs=s_in_specs, out_specs=P(),
         axis_names=set(axes) | {"model"}, check_vma=False)
 
@@ -379,7 +467,7 @@ def _model_local_pipeline(cfg, mesh, axes, fs_cfg, layout, has_ep, ep_axis,
                                    local=has_ep, view_shardings=view_sh)
         return new_params, new_state
 
-    sm_server = jax.shard_map(
+    sm_server = _shard_map(
         server_body, mesh=mesh,
         in_specs=(p_manual, opt_spec, P(), P()),
         out_specs=(p_manual, opt_spec),

@@ -5,19 +5,21 @@ a debug mesh over forced host devices, exercising the same shard_map path
 as the dry-run.  (For laptop-scale experiments use
 ``examples/train_federated_lm.py`` — same optimizer, no mesh.)
 
+Aggregation goes through the federation runtime (``repro.fed``):
+``--aggregate flat`` is one pmean, ``tree`` reduces hierarchically per
+mesh axis, ``async`` pipelines rounds through a staleness-discounted
+buffer (straggling rounds land one-or-more rounds late), and ``dense``
+is the full-gradient-psum baseline.
+
     python -m repro.launch.train --arch qwen3-0.6b --smoke \
-        --debug-mesh 4x2 --rounds 5
+        --debug-mesh 4x2 --rounds 5 --aggregate tree
 """
 
-import os
+import sys
 
-if "--debug-mesh" in str(os.sys.argv):
-    _n = 1
-    for _p in os.sys.argv[os.sys.argv.index("--debug-mesh") + 1].split("x"):
-        _n *= int(_p)
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                               + f" --xla_force_host_platform_device_count={_n}"
-                               ).strip()
+from repro.xla_env import debug_mesh_devices
+
+debug_mesh_devices(sys.argv)  # must precede the first jax import
 
 import argparse
 import time
@@ -29,6 +31,7 @@ import numpy as np
 from repro import configs
 from repro.core import fetchsgd as F
 from repro.data import synthetic
+from repro.fed import aggregator as fed_agg
 from repro.launch import mesh as mesh_lib, shapes, steps
 from repro.models import transformer
 from repro.optim import triangular
@@ -49,8 +52,11 @@ def main():
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--cols", type=int, default=1 << 14)
     ap.add_argument("--k", type=int, default=512)
-    ap.add_argument("--aggregate", default="sketch",
-                    choices=("sketch", "dense"))
+    ap.add_argument("--aggregate", default="flat",
+                    choices=("flat", "sketch", "tree", "async", "dense"))
+    ap.add_argument("--straggle-prob", type=float, default=0.3,
+                    help="async: probability a round's cohort reports late")
+    ap.add_argument("--staleness-discount", type=float, default=0.9)
     args = ap.parse_args()
 
     if args.debug_mesh:
@@ -78,6 +84,12 @@ def main():
     print(f"mesh {dict(mesh.shape)}  arch {cfg.name}  "
           f"d={transformer.param_count(params)/1e6:.1f}M  "
           f"aggregate={args.aggregate}")
+
+    is_async = args.aggregate == "async"
+    if is_async:
+        buf = fed_agg.AsyncBufferedAggregator(
+            fs, discount=args.staleness_discount)
+        straggle_rng = np.random.default_rng(1234)
     with mesh:
         for r in range(args.rounds):
             cb = ds.client_batch(r % 256)
@@ -90,10 +102,28 @@ def main():
                 batch["frames"] = jnp.zeros(
                     (args.global_batch, cfg.enc_seq, cfg.d_model))
             t0 = time.time()
-            params, opt, m = bundle.fn(params, opt, batch,
-                                       jnp.float32(lr_fn(r)))
+            if is_async:
+                inject, inject_w, n_late, max_s = buf.drain(r)
+                # the last round always lands on time so training never ends
+                # with an unapplied cohort
+                straggle = (straggle_rng.random() < args.straggle_prob
+                            and r < args.rounds - 1)
+                params, opt, m = bundle.fn(
+                    params, opt, batch, jnp.float32(lr_fn(r)),
+                    jnp.float32(0.0 if straggle else 1.0), inject,
+                    jnp.float32(inject_w))
+                if straggle:
+                    buf.submit(m["table"], produced_round=r,
+                               arrival_round=r + 1)
+                tag = (" [straggled]" if straggle else
+                       f" [late merged: {n_late}, staleness {max_s}]"
+                       if n_late else "")
+            else:
+                params, opt, m = bundle.fn(params, opt, batch,
+                                           jnp.float32(lr_fn(r)))
+                tag = ""
             print(f"round {r}: loss {float(m['loss']):.4f} "
-                  f"({time.time()-t0:.1f}s)")
+                  f"({time.time()-t0:.1f}s){tag}")
     assert np.isfinite(float(m["loss"]))
     print("done")
 

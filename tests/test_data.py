@@ -73,3 +73,33 @@ class TestSampling:
         batch = federated.cohort_batch(ds, [0, 1], pad_to=10)
         assert batch["tokens"].shape == (10, 8)
         assert batch["sample_weight"].sum() == 6
+
+    def test_cohort_pad_exact_fit(self):
+        """pad_to == cohort size: nothing padded, all weights one."""
+        ds = synthetic.ClassShardLM(vocab=64, seq_len=8, samples_per_client=3)
+        batch = federated.cohort_batch(ds, [0, 1], pad_to=6)
+        assert batch["tokens"].shape == (6, 8)
+        np.testing.assert_array_equal(batch["sample_weight"], np.ones(6))
+
+    def test_cohort_pad_truncates(self):
+        """pad_to smaller than the cohort: rows beyond pad_to are cut."""
+        ds = synthetic.ClassShardLM(vocab=64, seq_len=8, samples_per_client=3)
+        full = federated.cohort_batch(ds, [0, 1, 2])
+        batch = federated.cohort_batch(ds, [0, 1, 2], pad_to=4)
+        assert batch["tokens"].shape == (4, 8)
+        np.testing.assert_array_equal(batch["tokens"], full["tokens"][:4])
+        np.testing.assert_array_equal(batch["client_id"], full["client_id"][:4])
+        np.testing.assert_array_equal(batch["sample_weight"], np.ones(4))
+
+    def test_cohort_pad_weights_zero_exactly_padded_rows(self):
+        """Padded rows repeat the last example and carry zero weight."""
+        ds = synthetic.ClassShardLM(vocab=64, seq_len=8, samples_per_client=3)
+        batch = federated.cohort_batch(ds, [5, 9], pad_to=9)
+        assert batch["tokens"].shape == (9, 8)
+        np.testing.assert_array_equal(batch["sample_weight"],
+                                      np.array([1] * 6 + [0] * 3, np.float32))
+        # padding replicates the final real example (weight-masked out)
+        for row in range(6, 9):
+            np.testing.assert_array_equal(batch["tokens"][row],
+                                          batch["tokens"][5])
+            assert batch["client_id"][row] == batch["client_id"][5]

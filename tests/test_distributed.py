@@ -113,7 +113,8 @@ def test_expert_parallel_all_to_all_matches_local():
                  "w_down": P("data")}
         if "shared" in p:
             espec["shared"] = jax.tree.map(lambda _: P(), p["shared"])
-        f = jax.jit(jax.shard_map(body, mesh=mesh,
+        from repro.launch.steps import _shard_map
+        f = jax.jit(_shard_map(body, mesh=mesh,
                     in_specs=(espec, P("data")), out_specs=P("data"),
                     axis_names={"data"}, check_vma=False))
         with mesh:

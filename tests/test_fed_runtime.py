@@ -1,0 +1,273 @@
+"""Federation runtime: aggregation linearity, stragglers, checkpoint, resume."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import fetchsgd as F
+from repro.fed import (AsyncBufferedAggregator, FederationConfig,
+                       FlatAggregator, Orchestrator, StragglerModel,
+                       TreeAggregator, checkpoint as ckpt, make_aggregator,
+                       run_federated)
+from repro.fed.aggregator import tree_levels
+
+CFG = F.FetchSGDConfig(rows=3, cols=1 << 10, k=64)
+
+
+def _tables(rng, n, cfg=CFG):
+    return [jnp.asarray(rng.normal(size=(cfg.rows, cfg.cols))
+                        .astype(np.float32)) for _ in range(n)]
+
+
+class TestLinearity:
+    """Tree/async with zero dropout/staleness must reproduce flat exactly."""
+
+    @pytest.mark.parametrize("n", [1, 2, 5, 16, 23])
+    @pytest.mark.parametrize("fanout", [2, 3, 8])
+    def test_tree_equals_flat(self, rng, n, fanout):
+        tables = _tables(rng, n)
+        flat, _ = FlatAggregator(CFG).aggregate(tables)
+        tree, _ = TreeAggregator(CFG, fanout=fanout).aggregate(tables)
+        np.testing.assert_allclose(np.asarray(tree), np.asarray(flat),
+                                   atol=1e-6)
+
+    @pytest.mark.parametrize("n", [1, 4, 11])
+    def test_async_no_staleness_is_bitwise_flat(self, rng, n):
+        tables = _tables(rng, n)
+        flat, _ = FlatAggregator(CFG).aggregate(tables)
+        asyn, stats = AsyncBufferedAggregator(CFG).aggregate(tables)
+        np.testing.assert_array_equal(np.asarray(asyn), np.asarray(flat))
+        assert stats.n_late == 0
+
+    def test_weighted_tree_equals_flat(self, rng):
+        tables = _tables(rng, 7)
+        w = rng.uniform(0.5, 2.0, size=7).tolist()
+        flat, _ = FlatAggregator(CFG).aggregate(tables, weights=w)
+        tree, _ = TreeAggregator(CFG, fanout=2).aggregate(tables, weights=w)
+        np.testing.assert_allclose(np.asarray(tree), np.asarray(flat),
+                                   atol=1e-6)
+
+
+class TestAsyncBuffer:
+    def test_staleness_discounted_merge(self, rng):
+        t = _tables(rng, 3)
+        agg = AsyncBufferedAggregator(CFG, discount=0.5)
+        agg.submit(t[0], produced_round=0, arrival_round=2)
+        merged, stats = agg.aggregate(t[1:], round_idx=2)
+        expect = (t[1] + t[2] + 0.25 * t[0]) / 2.25
+        np.testing.assert_allclose(np.asarray(merged), np.asarray(expect),
+                                   atol=1e-6)
+        assert stats.n_late == 1 and stats.max_staleness == 2
+        assert stats.total_weight == pytest.approx(2.25)
+
+    def test_not_yet_arrived_stays_buffered(self, rng):
+        t = _tables(rng, 2)
+        agg = AsyncBufferedAggregator(CFG)
+        agg.submit(t[0], produced_round=0, arrival_round=5)
+        _, stats = agg.aggregate([t[1]], round_idx=1)
+        assert stats.n_late == 0 and agg.pending() == 1
+
+    def test_too_stale_is_dropped(self, rng):
+        t = _tables(rng, 2)
+        agg = AsyncBufferedAggregator(CFG, max_staleness=2)
+        agg.submit(t[0], produced_round=0, arrival_round=1)
+        merged, stats = agg.aggregate([t[1]], round_idx=10)
+        assert stats.n_late == 0 and agg.pending() == 0
+        np.testing.assert_array_equal(np.asarray(merged), np.asarray(t[1]))
+
+    def test_empty_round_zero_weight(self):
+        agg = AsyncBufferedAggregator(CFG)
+        table, stats = agg.aggregate([], round_idx=0)
+        assert stats.total_weight == 0
+        assert not np.asarray(table).any()
+
+
+class TestBytesAccounting:
+    def test_flat_bytes(self):
+        _, stats = FlatAggregator(CFG).aggregate(
+            [jnp.zeros((CFG.rows, CFG.cols))] * 6)
+        assert stats.upload_bytes == 6 * F.upload_bytes(CFG)
+        assert stats.root_ingress_tables == 6
+
+    def test_tree_bytes_match_core_accounting(self):
+        n, fanout = 23, 4
+        _, stats = TreeAggregator(CFG, fanout=fanout).aggregate(
+            [jnp.zeros((CFG.rows, CFG.cols))] * n)
+        core = F.tree_upload_bytes(CFG, n, fanout)
+        assert [(lv.n_messages, lv.bytes_on_wire) for lv in stats.levels] \
+            == core
+        # hierarchical totals exceed flat, but root fan-in is O(fanout)
+        assert stats.upload_bytes > n * F.upload_bytes(CFG)
+        assert stats.root_ingress_tables <= fanout
+
+    def test_tree_levels_single_client(self):
+        levels = tree_levels(1, 4, 100)
+        assert levels == tree_levels(1, 2, 100)
+        assert levels[0].n_messages == 1
+
+
+class TestOrchestrator:
+    @pytest.fixture(scope="class")
+    def micro(self):
+        from repro.launch import simulate
+        cfg = simulate.micro_cfg()
+        return cfg, simulate.micro_dataset(cfg)
+
+    @pytest.mark.parametrize("policy", ["flat", "tree", "async"])
+    def test_three_round_smoke(self, micro, policy):
+        cfg, ds = micro
+        res = run_federated(cfg, ds, fs_cfg=CFG, fed_cfg=FederationConfig(
+            rounds=3, clients_per_round=2, aggregate=policy))
+        assert len(res.losses) == 3
+        assert all(np.isfinite(l) for l in res.losses)
+        assert res.traffic["upload_bytes"] > 0
+
+    def test_policies_agree_without_failures(self, micro):
+        """No dropout/staleness: every policy drives the identical run."""
+        cfg, ds = micro
+        losses = {}
+        for policy in ("flat", "tree", "async"):
+            res = run_federated(cfg, ds, fs_cfg=CFG, fed_cfg=FederationConfig(
+                rounds=3, clients_per_round=3, aggregate=policy,
+                tree_fanout=2))
+            losses[policy] = res.losses
+        np.testing.assert_allclose(losses["tree"], losses["flat"], atol=1e-4)
+        np.testing.assert_allclose(losses["async"], losses["flat"],
+                                   atol=1e-4)
+
+    def test_stragglers_buffered_under_async(self, micro):
+        cfg, ds = micro
+        fed_cfg = FederationConfig(
+            rounds=6, clients_per_round=4, aggregate="async",
+            straggler=StragglerModel(straggle_prob=0.5, max_delay=2),
+            seed=3)
+        res = run_federated(cfg, ds, fs_cfg=CFG, fed_cfg=fed_cfg)
+        straggled = sum(r.n_straggling for r in res.records)
+        merged_late = sum(r.n_late for r in res.records)
+        assert straggled > 0
+        # everyone who straggled either merged late or is still pending
+        assert merged_late + res.extras["pending_late"] == straggled
+
+    def test_sync_drops_stragglers(self, micro):
+        cfg, ds = micro
+        fed_cfg = FederationConfig(
+            rounds=4, clients_per_round=4, aggregate="flat",
+            straggler=StragglerModel(straggle_prob=0.5, max_delay=2),
+            seed=3)
+        res = run_federated(cfg, ds, fs_cfg=CFG, fed_cfg=fed_cfg)
+        assert all(r.n_late == 0 for r in res.records)
+        assert sum(r.n_dropped for r in res.records) > 0
+
+    def test_variable_cohort(self, micro):
+        cfg, ds = micro
+        fed_cfg = FederationConfig(rounds=5, clients_per_round=6,
+                                   min_clients_per_round=1, seed=1)
+        res = run_federated(cfg, ds, fs_cfg=CFG, fed_cfg=fed_cfg)
+        sizes = {len(r.cohort) for r in res.records}
+        assert len(sizes) > 1           # actually varies
+        assert all(1 <= s <= 6 for s in sizes)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, rng):
+        from repro.launch import simulate
+        from repro.models import transformer
+        import jax
+        cfg = simulate.micro_cfg()
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        state = F.init_state(CFG)
+        state = F.FetchSGDState(
+            momentum_sketch=state.momentum_sketch + 1.5,
+            error_sketch=state.error_sketch - 0.5, step=state.step + 7)
+        ckpt.save(str(tmp_path), params, state, 12, extra={"note": "x"})
+        assert ckpt.latest_round(str(tmp_path)) == 12
+        out = ckpt.restore(str(tmp_path), params, F.init_state(CFG))
+        assert out.round_idx == 12 and out.extra == {"note": "x"}
+        assert out.late_buffer == []
+        np.testing.assert_array_equal(np.asarray(out.opt_state.momentum_sketch),
+                                      np.asarray(state.momentum_sketch))
+        assert int(out.opt_state.step) == 7
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(out.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_late_buffer_roundtrip(self, tmp_path, rng):
+        state = F.init_state(CFG)
+        agg = AsyncBufferedAggregator(CFG)
+        t = _tables(rng, 2)
+        agg.submit(t[0], produced_round=1, arrival_round=3)
+        agg.submit(t[1], produced_round=2, arrival_round=4, weight=0.5)
+        ckpt.save(str(tmp_path), {"w": jnp.zeros((2,))}, state, 2,
+                  late_buffer=agg.state())
+        out = ckpt.restore(str(tmp_path), {"w": jnp.zeros((2,))}, state)
+        agg2 = AsyncBufferedAggregator(CFG)
+        agg2.load_state(out.late_buffer)
+        assert agg2.pending() == 2
+        for orig, loaded in zip(agg.state(), agg2.state()):
+            np.testing.assert_array_equal(np.asarray(orig["table"]),
+                                          np.asarray(loaded["table"]))
+            assert (orig["produced"], orig["arrival"], orig["weight"]) == \
+                (loaded["produced"], loaded["arrival"], loaded["weight"])
+
+    def test_async_resume_replays_uninterrupted_run(self):
+        """Checkpoint/restore mid-run must not lose buffered late sketches."""
+        import tempfile
+        from repro.launch import simulate
+        cfg = simulate.micro_cfg()
+        ds = simulate.micro_dataset(cfg)
+        from repro.optim import triangular
+        base = dict(rounds=6, clients_per_round=3, aggregate="async",
+                    straggler=StragglerModel(straggle_prob=0.6, max_delay=3),
+                    seed=5)
+        lr_fn = triangular(0.2, 6)   # shared: the 3-round leg must schedule
+        uninterrupted = Orchestrator(    # as part of the full 6-round run
+            cfg, CFG, FederationConfig(**base), ds, lr_fn=lr_fn).run()
+        with tempfile.TemporaryDirectory() as d:
+            fed_cfg = FederationConfig(**base, checkpoint_dir=d,
+                                       checkpoint_every=3)
+            Orchestrator(cfg, CFG, FederationConfig(
+                **{**base, "rounds": 3}, checkpoint_dir=d,
+                checkpoint_every=3), ds, lr_fn=lr_fn).run()
+            resumed = Orchestrator(cfg, CFG, fed_cfg, ds, lr_fn=lr_fn)
+            assert resumed.start_round == 3
+            res = resumed.run()
+        np.testing.assert_allclose(
+            [l for l in res.losses],
+            [l for l in uninterrupted.losses[3:]], atol=1e-5)
+
+    def test_restore_empty_dir_is_none(self, tmp_path):
+        assert ckpt.restore(str(tmp_path), {}, F.init_state(CFG)) is None
+
+    def test_shape_mismatch_fails_loudly(self, tmp_path):
+        state = F.init_state(CFG)
+        ckpt.save(str(tmp_path), {"w": jnp.zeros((4,))}, state, 0)
+        with pytest.raises(ValueError, match="shape"):
+            ckpt.restore(str(tmp_path), {"w": jnp.zeros((5,))}, state)
+
+    def test_prune_keeps_newest(self, tmp_path):
+        state = F.init_state(CFG)
+        for r in range(5):
+            ckpt.save(str(tmp_path), {"w": jnp.zeros((2,))}, state, r,
+                      keep=2)
+        assert ckpt.latest_round(str(tmp_path)) == 4
+        assert ckpt.restore(str(tmp_path), {"w": jnp.zeros((2,))}, state,
+                            round_idx=0) is None
+
+    def test_orchestrator_resume(self, tmp_path):
+        from repro.launch import simulate
+        cfg = simulate.micro_cfg()
+        ds = simulate.micro_dataset(cfg)
+        fed_cfg = FederationConfig(rounds=4, clients_per_round=2,
+                                   checkpoint_dir=str(tmp_path),
+                                   checkpoint_every=2)
+        full = Orchestrator(cfg, CFG, fed_cfg, ds).run()
+        # a fresh orchestrator picks up after the last checkpoint (round 3)
+        resumed = Orchestrator(cfg, CFG, fed_cfg, ds)
+        assert resumed.start_round == 4
+        assert int(resumed.opt_state.step) == int(full.opt_state.step)
+
+
+def test_make_aggregator_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_aggregator("gossip", CFG)
