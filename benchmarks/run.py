@@ -12,7 +12,8 @@ import sys
 import traceback
 
 from . import (bench_aggregation_modes, bench_compression, bench_convergence,
-               bench_kernels, bench_sketch_aggregation, bench_true_topk)
+               bench_kernels, bench_simtime, bench_sketch_aggregation,
+               bench_true_topk)
 
 MODULES = [
     ("table1", bench_compression),
@@ -21,6 +22,7 @@ MODULES = [
     ("fig10", bench_true_topk),
     ("sec3.2", bench_sketch_aggregation),
     ("fed-runtime", bench_aggregation_modes),
+    ("simtime", bench_simtime),
 ]
 
 

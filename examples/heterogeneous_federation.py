@@ -1,0 +1,112 @@
+"""Wall-clock federation over a heterogeneous client population.
+
+The round clock hides the thing FetchSGD is actually for: real clients
+differ by orders of magnitude in uplink bandwidth and compute speed, and
+some are only periodically available.  This example runs the same micro
+LM federation through the event-driven virtual clock (``fed.simtime``)
+three ways:
+
+* **flat (sync)** — every round barriers on the cohort's slowest upload.
+  One phone on a 2G link stalls the entire federation.
+* **tree (sync)** — same barrier, but the merge topology's wall-clock
+  critical path (per-level slowest edge) is reported alongside byte
+  totals: bytes say tree costs *more*, the clock says the root stops
+  being the bottleneck.
+* **async (quorum)** — the server updates every ``quorum`` arrivals,
+  merging by arrival order with weight ``w * exp(-lambda * age_seconds)``.
+  Slow uploads land rounds later and are discounted, not lost — by sketch
+  linearity the merged table is still an exact weighted-mean sketch.
+
+    PYTHONPATH=src python examples/heterogeneous_federation.py
+    PYTHONPATH=src python examples/heterogeneous_federation.py \
+        --bw-sigma 2.5 --rounds 12 --quorum 2
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core import fetchsgd as F
+from repro.fed import (FederationConfig, HeterogeneityConfig, Orchestrator,
+                       SimTimeConfig)
+from repro.launch import simulate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients-per-round", type=int, default=6)
+    ap.add_argument("--quorum", type=int, default=3,
+                    help="async: server updates every N arrivals")
+    ap.add_argument("--compute-median", type=float, default=2.0)
+    ap.add_argument("--compute-sigma", type=float, default=0.6)
+    ap.add_argument("--bw-median", type=float, default=5e4,
+                    help="median uplink bytes/s (5e4 ~ a weak mobile link)")
+    ap.add_argument("--bw-sigma", type=float, default=2.0,
+                    help="lognormal spread: 2.0 means ~50x slow tail")
+    ap.add_argument("--avail-period", type=float, default=120.0,
+                    help="availability window period in virtual seconds")
+    ap.add_argument("--avail-duty-min", type=float, default=0.5)
+    ap.add_argument("--staleness-lambda", type=float, default=0.01)
+    ap.add_argument("--peak-lr", type=float, default=0.2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = simulate.micro_cfg()
+    fs = F.FetchSGDConfig(rows=5, cols=1 << 12, k=256, momentum=0.9)
+    het = HeterogeneityConfig(
+        compute_median=args.compute_median, compute_sigma=args.compute_sigma,
+        bandwidth_median=args.bw_median, bandwidth_sigma=args.bw_sigma,
+        avail_period=args.avail_period, avail_duty_min=args.avail_duty_min)
+    print(f"model {cfg.name}  sketch {fs.rows}x{fs.cols} k={fs.k} "
+          f"table={F.upload_bytes(fs)/1e3:.0f}kB")
+    print(f"population: compute ~lognorm(median {het.compute_median}s, "
+          f"sigma {het.compute_sigma}), uplink ~lognorm(median "
+          f"{het.bandwidth_median:.0f}B/s, sigma {het.bandwidth_sigma}), "
+          f"availability {args.avail_duty_min:.0%}+ of each "
+          f"{args.avail_period:.0f}s window\n")
+
+    results = {}
+    for policy, quorum in (("flat", None), ("tree", None),
+                           ("async", args.quorum)):
+        fed_cfg = FederationConfig(
+            rounds=args.rounds, clients_per_round=args.clients_per_round,
+            aggregate=policy, tree_fanout=2, clock="event",
+            simtime=SimTimeConfig(
+                staleness_lambda=args.staleness_lambda, quorum=quorum,
+                link_bandwidth=1e8, heterogeneity=het),
+            seed=args.seed)
+        orch = Orchestrator(cfg, fs, fed_cfg,
+                            simulate.micro_dataset(cfg, seed=args.seed),
+                            peak_lr=args.peak_lr)
+
+        def progress(rec, policy=policy):
+            loss = f"{rec.loss:.4f}" if rec.loss is not None else "  -   "
+            print(f"[{policy:5s}] round {rec.round_idx:2d}  loss {loss}  "
+                  f"t={rec.t_virtual:8.1f}s  merged={rec.n_fresh + rec.n_late}"
+                  f"  in_flight={rec.n_straggling}  "
+                  f"critical_path={rec.critical_path_s:6.1f}s")
+
+        results[policy] = orch.run(progress=progress)
+        print()
+
+    print(f"{'policy':6s} {'t_virtual':>10s} {'upload_MB':>10s} "
+          f"{'cp_sum_s':>9s} {'final_loss':>10s}")
+    for policy, res in results.items():
+        t_v = res.extras["t_virtual"]
+        up = sum(r.upload_bytes for r in res.records) / 1e6
+        cp = sum(r.critical_path_s for r in res.records)
+        loss = [l for l in res.losses if l is not None][-1]
+        print(f"{policy:6s} {t_v:9.1f}s {up:10.2f} {cp:9.1f} {loss:10.4f}")
+        assert np.isfinite(loss)
+    print("\nsame byte totals, very different clocks: the skewed uplink "
+          "tail sets sync wall-clock;\nasync keeps updating while "
+          "stragglers' sketches are still in flight.")
+
+
+if __name__ == "__main__":
+    main()

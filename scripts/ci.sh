@@ -1,18 +1,40 @@
 #!/usr/bin/env bash
-# CI entry: tier-1 test suite + federated simulation smoke.
-# Usage: scripts/ci.sh  (from the repo root)
+# CI entry. Usage: scripts/ci.sh [tier1|tier2|all]   (from the repo root)
+#
+#   tier1 — the full test suite + one 3-round simulate smoke per policy
+#   tier2 — sketch-invariant property tests (hypothesis) + simtime tests
+#           + a 20-event event-clock smoke (5 rounds x 4 clients)
 set -euo pipefail
 cd "$(dirname "$0")/.."
+TIER="${1:-all}"
+case "$TIER" in
+    tier1|tier2|all) ;;
+    *) echo "usage: scripts/ci.sh [tier1|tier2|all]" >&2; exit 1 ;;
+esac
 
 python -m pip install -q -r requirements-dev.txt || \
     echo "WARN: dev deps unavailable; property tests will skip"
 
-echo "== tier-1 tests"
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-echo "== 3-round simulate smoke (one per aggregation policy)"
-for policy in flat tree async; do
-    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+if [[ "$TIER" == "tier1" || "$TIER" == "all" ]]; then
+    echo "== tier-1 tests"
+    python -m pytest -x -q
+
+    echo "== 3-round simulate smoke (one per aggregation policy)"
+    for policy in flat tree async; do
         python -m repro.launch.simulate --aggregate "$policy" --rounds 3
-done
-echo "CI OK"
+    done
+fi
+
+if [[ "$TIER" == "tier2" || "$TIER" == "all" ]]; then
+    echo "== tier-2: property tests + event-clock tests"
+    python -m pytest -x -q tests/test_sketch_properties.py \
+        tests/test_simtime.py
+    echo "== 20-event simtime smoke (skewed bandwidth, async quorum)"
+    python -m repro.launch.simulate --clock event --aggregate async \
+        --rounds 5 --clients-per-round 4 --quorum 2 --bw-sigma 2.0
+    python -m repro.launch.simulate --clock event --aggregate tree \
+        --rounds 3 --bw-sigma 2.0
+fi
+echo "CI OK ($TIER)"

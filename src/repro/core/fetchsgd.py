@@ -208,7 +208,14 @@ def tree_upload_bytes(cfg: FetchSGDConfig, n_clients: int,
 
 def tree_level_bytes(table_bytes: int, n: int,
                      fanout: int = 4) -> list[tuple[int, int]]:
-    """The raw level math behind ``tree_upload_bytes`` (any message size)."""
+    """The raw level math behind ``tree_upload_bytes`` (any message size).
+
+    Degenerate cohorts are exact: ``n == 1`` is a single client-to-root
+    message (one level, same bytes as flat), ``n == 0`` is no messages at
+    all — an empty list, not a phantom zero-message level.
+    """
+    if n <= 0:
+        return []
     levels = []
     while n > 1:
         levels.append((n, n * table_bytes))

@@ -9,9 +9,15 @@ into a runtime:
   async (a buffer of late sketches merged with staleness-discounted
   weights — exact up to the discount, again by linearity).
 * ``orchestrator`` — multi-round training with client dropout, straggler
-  delay models, and variable cohort size per round.
+  delay models, and variable cohort size per round; under
+  ``FederationConfig(clock="event")`` the round loop becomes a
+  discrete-event virtual-clock loop over heterogeneous client profiles.
+* ``simtime`` — the event clock's primitives: ``ClientProfile`` (compute
+  speed, uplink bandwidth, availability windows), deterministic
+  ``HeterogeneityModel`` sampling, and the checkpointable ``EventQueue``.
 * ``checkpoint`` — persist/restore params + ``FetchSGDState`` + round
-  counter so long runs survive restarts.
+  counter (+ the async late buffer and the event queue/virtual clock) so
+  long runs survive restarts and resume byte-identically.
 """
 
 from .aggregator import (AggregationStats, Aggregator,           # noqa: F401
@@ -22,3 +28,6 @@ from .checkpoint import latest_round, restore, save              # noqa: F401
 from .orchestrator import (FederationConfig, FedRunResult,       # noqa: F401
                            Orchestrator, RoundRecord, StragglerModel,
                            run_federated)
+from .simtime import (ClientProfile, Event, EventQueue,          # noqa: F401
+                      HeterogeneityConfig, HeterogeneityModel,
+                      SimTimeConfig)

@@ -21,7 +21,17 @@ aggregation topology carries one full (rows x cols) float32 table.
   receives more than ``fanout`` tables: root ingress drops from ``n`` to
   ``fanout`` tables, which is the whole point of hierarchical aggregation.
 * async: same totals as flat, but contributions may arrive ``s`` rounds
-  late and are merged with weight ``discount**s``.
+  late and are merged with weight ``discount**s``.  Under the event clock
+  (``staleness_lambda`` set) staleness is measured in *virtual seconds*
+  and the discount is ``exp(-lambda * age)`` — the continuous-time limit
+  of the per-round geometric discount.
+
+Wall-clock accounting: when per-edge bandwidths are supplied
+(``bandwidths=`` per leaf, ``link_bandwidth`` for internal tree edges),
+each level also reports its slowest edge's transfer time; transfers within
+a level run in parallel, so the topology's wall-clock critical path is the
+sum of per-level maxima (``AggregationStats.critical_path_s``) — which can
+diverge wildly from flat byte totals on a skewed bandwidth profile.
 
 ``mesh_aggregate`` is the in-graph (shard_map) counterpart used by the
 distributed step builders in ``repro.launch.steps``.
@@ -30,6 +40,7 @@ distributed step builders in ``repro.launch.steps``.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import jax
@@ -45,18 +56,26 @@ class LevelStats:
     level: int
     n_messages: int         # tables sent up from this level
     bytes_on_wire: int      # n_messages * table_bytes
+    max_edge_seconds: float = 0.0   # slowest edge transfer at this level
+                                    # (0 when no bandwidths were supplied)
 
 
 @dataclasses.dataclass(frozen=True)
 class AggregationStats:
-    """Bytes-on-wire + contribution accounting for one round's merge."""
+    """Bytes-on-wire + contribution accounting for one round's merge.
+
+    A round that merges zero tables reports ``levels=()`` — no messages
+    means no levels, so ``upload_bytes``, ``root_ingress_tables`` and
+    ``critical_path_s`` are all naturally zero.
+    """
 
     policy: str
     n_fresh: int            # tables produced this round
     n_late: int             # buffered tables folded in (async only)
     total_weight: float     # sum of effective contribution weights
     levels: tuple[LevelStats, ...]
-    max_staleness: int = 0  # oldest late contribution merged (rounds)
+    max_staleness: float = 0   # oldest late contribution merged: rounds
+                               # (round clock) or virtual seconds (event)
 
     @property
     def upload_bytes(self) -> int:
@@ -67,18 +86,49 @@ class AggregationStats:
         """Tables received by the final merge node — the fan-in bottleneck."""
         return self.levels[-1].n_messages if self.levels else 0
 
+    @property
+    def critical_path_s(self) -> float:
+        """Wall-clock lower bound of the merge: per-level transfers run in
+        parallel, levels are sequential, so the critical path is the sum of
+        each level's slowest edge."""
+        return sum(lv.max_edge_seconds for lv in self.levels)
 
-def tree_levels(n: int, fanout: int, table_bytes: int) -> tuple[LevelStats, ...]:
+
+def tree_levels(n: int, fanout: int, table_bytes: int,
+                leaf_bandwidths: Sequence[float] | None = None,
+                link_bandwidth: float | None = None
+                ) -> tuple[LevelStats, ...]:
     """Per-level message counts for a ``fanout``-ary merge of ``n`` leaves.
 
     Every node (including leaves) sends exactly one table to its parent;
     the root sends nothing.  The level math lives in
     ``core.fetchsgd.tree_level_bytes`` (single source of truth for the
-    accounting in both packages).
+    accounting in both packages).  ``leaf_bandwidths`` (bytes/s, one per
+    leaf) and ``link_bandwidth`` (internal edges) add per-level wall-clock:
+    level 0's slowest edge is the slowest client uplink, deeper levels ride
+    the backbone.
     """
-    return tuple(LevelStats(level=lv, n_messages=msgs, bytes_on_wire=bts)
+    def edge_s(lv: int) -> float:
+        if lv == 0 and leaf_bandwidths:
+            return table_bytes / min(leaf_bandwidths)
+        if lv > 0 and link_bandwidth:
+            return table_bytes / link_bandwidth
+        return 0.0
+    return tuple(LevelStats(level=lv, n_messages=msgs, bytes_on_wire=bts,
+                            max_edge_seconds=edge_s(lv))
                  for lv, (msgs, bts) in
                  enumerate(F.tree_level_bytes(table_bytes, n, fanout)))
+
+
+def _leaf_level(n: int, table_bytes: int,
+                bandwidths: Sequence[float] | None) -> tuple[LevelStats, ...]:
+    """Single-level (flat/async) stats; () for an empty round."""
+    if n == 0:
+        return ()
+    edge = table_bytes / min(bandwidths) if bandwidths else 0.0
+    return (LevelStats(level=0, n_messages=n,
+                       bytes_on_wire=n * table_bytes,
+                       max_edge_seconds=edge),)
 
 
 class Aggregator:
@@ -95,7 +145,9 @@ class Aggregator:
 
     def aggregate(self, tables: Sequence[jax.Array], *,
                   weights: Sequence[float] | None = None,
-                  round_idx: int = 0) -> tuple[jax.Array, AggregationStats]:
+                  round_idx: float = 0,
+                  bandwidths: Sequence[float] | None = None
+                  ) -> tuple[jax.Array, AggregationStats]:
         raise NotImplementedError
 
     @staticmethod
@@ -112,7 +164,8 @@ class FlatAggregator(Aggregator):
 
     name = "flat"
 
-    def aggregate(self, tables, *, weights=None, round_idx=0):
+    def aggregate(self, tables, *, weights=None, round_idx=0,
+                  bandwidths=None):
         tables, weights = self._weighted(tables, weights)
         total_w = sum(weights)
         acc = self._zeros()
@@ -122,8 +175,7 @@ class FlatAggregator(Aggregator):
         stats = AggregationStats(
             policy=self.name, n_fresh=len(tables), n_late=0,
             total_weight=total_w,
-            levels=(LevelStats(0, len(tables),
-                               len(tables) * self.table_bytes),))
+            levels=_leaf_level(len(tables), self.table_bytes, bandwidths))
         return table, stats
 
 
@@ -138,13 +190,18 @@ class TreeAggregator(Aggregator):
 
     name = "tree"
 
-    def __init__(self, cfg: F.FetchSGDConfig, fanout: int = 4):
+    def __init__(self, cfg: F.FetchSGDConfig, fanout: int = 4,
+                 link_bandwidth: float | None = None):
         super().__init__(cfg)
         if fanout < 2:
             raise ValueError(f"fanout must be >= 2, got {fanout}")
+        if link_bandwidth is not None and link_bandwidth <= 0:
+            raise ValueError("link_bandwidth must be > 0")
         self.fanout = fanout
+        self.link_bandwidth = link_bandwidth   # internal-edge bytes/s
 
-    def aggregate(self, tables, *, weights=None, round_idx=0):
+    def aggregate(self, tables, *, weights=None, round_idx=0,
+                  bandwidths=None):
         tables, weights = self._weighted(tables, weights)
         total_w = sum(weights)
         nodes = [t if w == 1.0 else w * t for t, w in zip(tables, weights)]
@@ -157,7 +214,9 @@ class TreeAggregator(Aggregator):
         stats = AggregationStats(
             policy=self.name, n_fresh=len(tables), n_late=0,
             total_weight=total_w,
-            levels=tree_levels(len(tables), self.fanout, self.table_bytes))
+            levels=tree_levels(len(tables), self.fanout, self.table_bytes,
+                               leaf_bandwidths=bandwidths,
+                               link_bandwidth=self.link_bandwidth))
         return table, stats
 
 
@@ -170,22 +229,59 @@ class AsyncBufferedAggregator(Aggregator):
     discount-weighted mean gradient.  With no late arrivals the merge
     order (and hence the result, bitwise) is identical to
     ``FlatAggregator``.
+
+    Two clocks share one buffer:
+
+    * **round clock** (default): ``produced``/``arrival`` are round
+      indices, the discount is geometric (``discount**s``) and entries
+      staler than ``max_staleness`` rounds are dropped.
+    * **event clock** (``staleness_lambda`` set): ``produced``/``arrival``
+      are virtual seconds, the discount is ``exp(-lambda * age)`` and
+      ``max_age`` (seconds, None = keep everything) is the drop threshold.
+      ``fed.orchestrator``'s event loop feeds arrivals in wall-clock order
+      and drains at the current virtual time.
     """
 
     name = "async"
 
     def __init__(self, cfg: F.FetchSGDConfig, discount: float = 0.9,
-                 max_staleness: int = 8):
+                 max_staleness: int = 8,
+                 staleness_lambda: float | None = None,
+                 max_age: float | None = None):
         super().__init__(cfg)
         if not 0.0 < discount <= 1.0:
             raise ValueError(f"discount must be in (0, 1], got {discount}")
+        if staleness_lambda is not None and staleness_lambda < 0:
+            raise ValueError("staleness_lambda must be >= 0")
         self.discount = discount
         self.max_staleness = max_staleness
+        self.staleness_lambda = staleness_lambda
+        self.max_age = max_age
         self._buffer: list[dict] = []   # {table, produced, arrival, weight}
 
-    def submit(self, table: jax.Array, *, produced_round: int,
-               arrival_round: int, weight: float = 1.0) -> None:
-        """Enqueue a straggler's table to be merged once it 'arrives'."""
+    @property
+    def timed(self) -> bool:
+        """True when staleness is measured in virtual seconds."""
+        return self.staleness_lambda is not None
+
+    def _discount_for(self, age) -> float:
+        if self.timed:
+            return math.exp(-self.staleness_lambda * age)
+        return self.discount ** age
+
+    def _too_stale(self, age) -> bool:
+        if self.timed:
+            return self.max_age is not None and age > self.max_age
+        return age > self.max_staleness
+
+    def submit(self, table: jax.Array, *, produced_round,
+               arrival_round, weight: float = 1.0) -> None:
+        """Enqueue a straggler's table to be merged once it 'arrives'.
+
+        Under the event clock the two arguments are virtual-second floats
+        (dispatch time and arrival time); compute + upload always take
+        positive time, so arrival > produced holds in both clocks.
+        """
         if arrival_round <= produced_round:
             raise ValueError("arrival_round must be > produced_round")
         self._buffer.append(dict(table=table, produced=produced_round,
@@ -200,16 +296,19 @@ class AsyncBufferedAggregator(Aggregator):
 
     def load_state(self, entries: list[dict]) -> None:
         """Restore a checkpointed buffer (replaces current contents)."""
+        cast = float if self.timed else int
         self._buffer = [dict(table=e["table"],
-                             produced=int(e["produced"]),
-                             arrival=int(e["arrival"]),
+                             produced=cast(e["produced"]),
+                             arrival=cast(e["arrival"]),
                              weight=float(e["weight"])) for e in entries]
 
-    def drain(self, round_idx: int) -> tuple[jax.Array, float, int, int]:
+    def drain(self, round_idx) -> tuple[jax.Array, float, int, float]:
         """Pop arrived entries: (discounted weighted sum, weight, n, max_s).
 
-        Entries staler than ``max_staleness`` are dropped on the floor —
-        their gradient direction is too old to help.
+        ``round_idx`` is the current round (round clock) or the current
+        virtual time in seconds (event clock).  Entries staler than the
+        clock's drop threshold are dropped on the floor — their gradient
+        direction is too old to help.
         """
         acc, total_w, n, max_s = self._zeros(), 0.0, 0, 0
         keep = []
@@ -218,9 +317,9 @@ class AsyncBufferedAggregator(Aggregator):
                 keep.append(e)
                 continue
             s = round_idx - e["produced"]
-            if s > self.max_staleness:
+            if self._too_stale(s):
                 continue
-            w = e["weight"] * self.discount ** s
+            w = e["weight"] * self._discount_for(s)
             acc = acc + w * e["table"]
             total_w += w
             n += 1
@@ -228,7 +327,8 @@ class AsyncBufferedAggregator(Aggregator):
         self._buffer = keep
         return acc, total_w, n, max_s
 
-    def aggregate(self, tables, *, weights=None, round_idx=0):
+    def aggregate(self, tables, *, weights=None, round_idx=0,
+                  bandwidths=None):
         tables, weights = self._weighted(tables, weights)
         late_sum, late_w, n_late, max_s = self.drain(round_idx)
         acc = self._zeros()
@@ -241,27 +341,33 @@ class AsyncBufferedAggregator(Aggregator):
         stats = AggregationStats(
             policy=self.name, n_fresh=len(tables), n_late=n_late,
             total_weight=total_w, max_staleness=max_s,
-            levels=(LevelStats(0, n, n * self.table_bytes),))
+            levels=_leaf_level(n, self.table_bytes, bandwidths))
         return table, stats
 
 
 def make_aggregator(policy: str, cfg: F.FetchSGDConfig, *, fanout: int = 4,
-                    discount: float = 0.9,
-                    max_staleness: int = 8) -> Aggregator:
+                    discount: float = 0.9, max_staleness: int = 8,
+                    staleness_lambda: float | None = None,
+                    max_age: float | None = None,
+                    link_bandwidth: float | None = None) -> Aggregator:
     if policy == "flat":
         return FlatAggregator(cfg)
     if policy == "tree":
-        return TreeAggregator(cfg, fanout=fanout)
+        return TreeAggregator(cfg, fanout=fanout,
+                              link_bandwidth=link_bandwidth)
     if policy == "async":
         return AsyncBufferedAggregator(cfg, discount=discount,
-                                       max_staleness=max_staleness)
+                                       max_staleness=max_staleness,
+                                       staleness_lambda=staleness_lambda,
+                                       max_age=max_age)
     raise ValueError(f"unknown aggregation policy {policy!r}")
 
 
 # -- in-graph (shard_map) counterpart ----------------------------------------
 
 def mesh_aggregate(table: jax.Array, axes: tuple[str, ...],
-                   policy: str = "flat") -> jax.Array:
+                   policy: str = "flat",
+                   weight: jax.Array | None = None) -> jax.Array:
     """Mean the per-shard sketch table over the manual mesh axes.
 
     ``flat`` is one collective over all client axes at once.  ``tree``
@@ -269,13 +375,30 @@ def mesh_aggregate(table: jax.Array, axes: tuple[str, ...],
     outward (cross-pod DCN) — the mesh realization of ``TreeAggregator``:
     same mean (every axis has fixed size, so the mean of per-axis means is
     the overall mean), but each collective spans one link class.
+
+    ``weight`` (a per-shard scalar, FedSKETCH-style) switches both
+    policies to the exact weighted mean ``psum(w*t) / psum(w)``: numerator
+    and denominator are reduced with the policy's topology and divided
+    once at the end, so tree and flat agree to float tolerance — weighted
+    merging is still just linearity.
     """
     if not axes:
         return table
+    if weight is None:
+        if policy == "flat":
+            return jax.lax.pmean(table, axes)
+        if policy == "tree":
+            for ax in reversed(axes):
+                table = jax.lax.pmean(table, (ax,))
+            return table
+        raise ValueError(f"unknown mesh aggregation policy {policy!r}")
+    num, den = weight * table, weight
     if policy == "flat":
-        return jax.lax.pmean(table, axes)
-    if policy == "tree":
+        num, den = jax.lax.psum(num, axes), jax.lax.psum(den, axes)
+    elif policy == "tree":
         for ax in reversed(axes):
-            table = jax.lax.pmean(table, (ax,))
-        return table
-    raise ValueError(f"unknown mesh aggregation policy {policy!r}")
+            num = jax.lax.psum(num, (ax,))
+            den = jax.lax.psum(den, (ax,))
+    else:
+        raise ValueError(f"unknown mesh aggregation policy {policy!r}")
+    return num / jnp.maximum(den, 1e-8)

@@ -6,7 +6,11 @@ same-structure template pytree (the orchestrator always has one: its
 freshly-initialized params).  The sidecar carries the round counter and
 free-form metadata for humans / resume logic.  The async aggregator's
 late-sketch buffer is persisted alongside, so an async run resumed from a
-checkpoint replays exactly like an uninterrupted one.
+checkpoint replays exactly like an uninterrupted one.  Under the event
+clock (``fed.simtime``) the virtual clock and the in-flight event queue —
+each event's sketch table plus its (time, round, slot, client, produced,
+weight, loss) metadata — are persisted too, so the resumed event loop pops
+the identical arrival sequence.
 """
 
 from __future__ import annotations
@@ -22,6 +26,8 @@ import numpy as np
 
 from repro.core import fetchsgd as F
 
+from . import simtime as simtime_lib
+
 _CKPT_RE = re.compile(r"^ckpt_(\d{8})\.npz$")
 
 
@@ -34,6 +40,7 @@ class Checkpoint:
     round_idx: int
     extra: dict
     late_buffer: list       # AsyncBufferedAggregator.state() entries
+    simtime: dict | None = None   # {"now": float, "events": [Event, ...]}
 
 
 def _paths(directory: str, round_idx: int) -> tuple[str, str]:
@@ -55,11 +62,15 @@ def latest_round(directory: str) -> int | None:
 
 def save(directory: str, params, opt_state: F.FetchSGDState,
          round_idx: int, *, extra: dict | None = None,
-         late_buffer: list | None = None, keep: int = 3) -> str:
+         late_buffer: list | None = None,
+         simtime: dict | None = None, keep: int = 3) -> str:
     """Write one checkpoint; prune to the newest ``keep``. Returns npz path.
 
     ``late_buffer`` is ``AsyncBufferedAggregator.state()``: each entry's
     table goes in the npz, its (produced, arrival, weight) in the sidecar.
+    ``simtime`` is the event clock's state ``{"now": float, "events":
+    [simtime.Event, ...]}``: event tables go in the npz, their metadata in
+    the sidecar.
     """
     os.makedirs(directory, exist_ok=True)
     leaves = jax.tree_util.tree_leaves(params)
@@ -70,16 +81,25 @@ def save(directory: str, params, opt_state: F.FetchSGDState,
     late_meta = []
     for i, e in enumerate(late_buffer or []):
         arrays[f"late_{i:05d}"] = np.asarray(e["table"])
-        late_meta.append({"produced": int(e["produced"]),
-                          "arrival": int(e["arrival"]),
+        # produced/arrival are round ints (round clock) or virtual-second
+        # floats (event clock); JSON keeps either exactly
+        late_meta.append({"produced": e["produced"],
+                          "arrival": e["arrival"],
                           "weight": float(e["weight"])})
+    sim_meta = None
+    if simtime is not None:
+        sim_meta = {"now": float(simtime["now"]), "events": []}
+        for i, ev in enumerate(simtime["events"]):
+            arrays[f"event_{i:05d}"] = np.asarray(ev.table)
+            sim_meta["events"].append(ev.meta())
     npz, meta = _paths(directory, round_idx)
     tmp = npz + ".tmp.npz"
     np.savez(tmp, **arrays)
     os.replace(tmp, npz)
     with open(meta, "w") as f:
         json.dump({"round": round_idx, "n_param_leaves": len(leaves),
-                   "late": late_meta, "extra": extra or {}}, f, indent=1)
+                   "late": late_meta, "simtime": sim_meta,
+                   "extra": extra or {}}, f, indent=1)
     _prune(directory, keep)
     return npz
 
@@ -126,10 +146,18 @@ def restore(directory: str, params_template, state_template: F.FetchSGDState,
         late_buffer = [
             dict(table=jax.numpy.asarray(data[f"late_{i:05d}"]), **e)
             for i, e in enumerate(info.get("late", []))]
+        sim_meta = info.get("simtime")
+        sim = None
+        if sim_meta is not None:
+            sim = {"now": float(sim_meta["now"]),
+                   "events": [simtime_lib.Event(
+                       table=jax.numpy.asarray(data[f"event_{i:05d}"]), **m)
+                       for i, m in enumerate(sim_meta["events"])]}
     params = jax.tree_util.tree_unflatten(treedef, new_leaves)
     return Checkpoint(params=params, opt_state=state,
                       round_idx=int(info["round"]),
-                      extra=info.get("extra", {}), late_buffer=late_buffer)
+                      extra=info.get("extra", {}), late_buffer=late_buffer,
+                      simtime=sim)
 
 
 def _prune(directory: str, keep: int) -> None:

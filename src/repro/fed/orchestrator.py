@@ -14,6 +14,21 @@ On top it adds the failure modes real federations see:
 
 Both are driven by a per-(seed, round, client) RNG so runs are exactly
 reproducible — including across a checkpoint restore.
+
+Two clocks drive the loop (``FederationConfig.clock``):
+
+* ``"round"`` — the classic barrier loop: round r waits for round r's
+  cohort, staleness is counted in round indices.
+* ``"event"`` — a discrete-event virtual clock (``fed.simtime``): each
+  client's upload is a timed event (``finish = next_available(now) +
+  compute_seconds + table_bytes / bandwidth`` from its heterogeneity
+  profile), the server merges on *arrival order*, and staleness is
+  measured in virtual seconds (discount ``exp(-lambda * age)``).  Under
+  flat/tree the round barrier sits at the cohort's slowest upload; under
+  async the server updates every ``quorum`` arrivals while slower uploads
+  from older rounds are still in flight — exactly the regime FetchSGD's
+  linearity is built for.  The event queue and virtual clock are
+  checkpointed, so a resumed run replays byte-identically.
 """
 
 from __future__ import annotations
@@ -33,6 +48,7 @@ from repro.optim import triangular
 
 from . import aggregator as agg_lib
 from . import checkpoint as ckpt_lib
+from . import simtime as simtime_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,9 +78,18 @@ class FederationConfig:
     staleness_discount: float = 0.9
     max_staleness: int = 8
     straggler: StragglerModel = StragglerModel()
+    clock: str = "round"                      # round | event (fed.simtime)
+    simtime: simtime_lib.SimTimeConfig | None = None   # event-clock knobs
+    weight_by: str = "uniform"                # uniform | samples | profile
     seed: int = 0
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0                 # 0 = only if dir set: final round
+
+    def __post_init__(self):
+        if self.clock not in ("round", "event"):
+            raise ValueError(f"clock must be 'round'|'event', got {self.clock}")
+        if self.weight_by not in ("uniform", "samples", "profile"):
+            raise ValueError(f"unknown weight_by {self.weight_by!r}")
 
 
 @dataclasses.dataclass
@@ -77,8 +102,12 @@ class RoundRecord:
     n_fresh: int
     n_late: int
     n_dropped: int
-    n_straggling: int     # produced this round, arriving later
+    n_straggling: int     # round clock: produced this round, arriving
+                          # later; event clock: uploads still in flight
     upload_bytes: int
+    t_dispatch: float | None = None   # event clock: cohort send time
+    t_virtual: float | None = None    # event clock: server update time
+    critical_path_s: float = 0.0      # wall-clock critical path of the merge
 
 
 @dataclasses.dataclass
@@ -131,10 +160,23 @@ class Orchestrator:
         self.start_round = 0
         self.lr_fn = lr_fn or triangular(peak_lr, fed_cfg.rounds)
         self.grad_fn = grad_fn or make_grad_fn(model_cfg)
+        self.is_event = fed_cfg.clock == "event"
+        self.sim_cfg = fed_cfg.simtime or simtime_lib.SimTimeConfig()
+        self.het = (simtime_lib.HeterogeneityModel(
+                        self.sim_cfg.heterogeneity, fed_cfg.seed)
+                    if self.is_event or fed_cfg.weight_by == "profile"
+                    else None)
+        self._queue = simtime_lib.EventQueue()
+        self._now = 0.0
         self.aggregator = agg_lib.make_aggregator(
             fed_cfg.aggregate, fs_cfg, fanout=fed_cfg.tree_fanout,
             discount=fed_cfg.staleness_discount,
-            max_staleness=fed_cfg.max_staleness)
+            max_staleness=fed_cfg.max_staleness,
+            staleness_lambda=(self.sim_cfg.staleness_lambda
+                              if self.is_event else None),
+            max_age=self.sim_cfg.max_age if self.is_event else None,
+            link_bandwidth=(self.sim_cfg.link_bandwidth
+                            if self.is_event else None))
         self.meter = compression.TrafficMeter(d=self.layout.total)
 
         lay, cfg = self.layout, fs_cfg
@@ -153,6 +195,9 @@ class Orchestrator:
                 if isinstance(self.aggregator,
                               agg_lib.AsyncBufferedAggregator):
                     self.aggregator.load_state(restored.late_buffer)
+                if restored.simtime is not None:
+                    self._now = float(restored.simtime["now"])
+                    self._queue.load_state(restored.simtime["events"])
 
     # -- per-round pieces ---------------------------------------------------
 
@@ -174,52 +219,158 @@ class Orchestrator:
             return "late", int(rng.integers(1, sm.max_delay + 1))
         return "fresh", 0
 
-    def run_round(self, r: int) -> RoundRecord:
-        fc = self.fed_cfg
-        clients = self._cohort(r)
-        rng = _round_rng(fc.seed, r, stream=1)
-        is_async = isinstance(self.aggregator, agg_lib.AsyncBufferedAggregator)
+    def _client_batch(self, c: int) -> dict:
+        return {k: jnp.asarray(v) for k, v in
+                self.dataset.client_batch(c).items()
+                if k in ("tokens", "labels")}
 
-        fresh, losses, n_dropped, n_straggling = [], [], 0, 0
-        for c in clients:
-            fate, delay = self._fate(rng)
-            if fate == "dropped":
-                n_dropped += 1
-                continue
-            batch = {k: jnp.asarray(v) for k, v in
-                     self.dataset.client_batch(int(c)).items()
-                     if k in ("tokens", "labels")}
-            loss, grads = self.grad_fn(self.params, batch)
-            table = self._sketch(grads)
-            losses.append(float(loss))
-            if fate == "late":
-                if is_async:
-                    self.aggregator.submit(table, produced_round=r,
-                                           arrival_round=r + delay)
-                    n_straggling += 1
-                else:  # sync barrier: a late client is a lost client
-                    n_dropped += 1
-                continue
-            fresh.append(table)
+    def _client_weight(self, c: int, batch: dict) -> float:
+        """FedSKETCH-style per-client merge weight (exact by linearity)."""
+        wb = self.fed_cfg.weight_by
+        if wb == "samples":
+            return float(len(batch["tokens"]))
+        if wb == "profile":
+            return self.het.profile(c).weight
+        return 1.0
 
-        table, stats = self.aggregator.aggregate(fresh, round_idx=r)
-        if stats.total_weight > 0:
-            delta, self.opt_state = self._server(table, self.opt_state,
-                                                 self.lr_fn(r))
-            self.params = self._apply(self.params, delta)
+    def _record_traffic(self, upload_bytes: int, n_participating: int
+                        ) -> None:
         # paper accounting (compression.fetchsgd_round): k values at 4 bytes
         # each per participating client — matching the other simulate methods
         per_client_down = compression.fetchsgd_round(
             self.fs_cfg.rows, self.fs_cfg.cols, self.fs_cfg.k).download
         self.meter.record(compression.RoundTraffic(
-            upload=stats.upload_bytes,
-            download=per_client_down * (len(fresh) + n_straggling)),
-            clients=1)
+            upload=upload_bytes,
+            download=per_client_down * n_participating), clients=1)
+
+    def run_round(self, r: int) -> RoundRecord:
+        if self.is_event:
+            return self._run_event_round(r)
+        fc = self.fed_cfg
+        clients = self._cohort(r)
+        rng = _round_rng(fc.seed, r, stream=1)
+        is_async = isinstance(self.aggregator, agg_lib.AsyncBufferedAggregator)
+
+        fresh, fresh_w, losses, n_dropped, n_straggling = [], [], [], 0, 0
+        for c in clients:
+            fate, delay = self._fate(rng)
+            if fate == "dropped":
+                n_dropped += 1
+                continue
+            batch = self._client_batch(int(c))
+            loss, grads = self.grad_fn(self.params, batch)
+            table = self._sketch(grads)
+            losses.append(float(loss))
+            w = self._client_weight(int(c), batch)
+            if fate == "late":
+                if is_async:
+                    self.aggregator.submit(table, produced_round=r,
+                                           arrival_round=r + delay, weight=w)
+                    n_straggling += 1
+                else:  # sync barrier: a late client is a lost client
+                    n_dropped += 1
+                continue
+            fresh.append(table)
+            fresh_w.append(w)
+
+        table, stats = self.aggregator.aggregate(fresh, weights=fresh_w,
+                                                 round_idx=r)
+        if stats.total_weight > 0:
+            delta, self.opt_state = self._server(table, self.opt_state,
+                                                 self.lr_fn(r))
+            self.params = self._apply(self.params, delta)
+        self._record_traffic(stats.upload_bytes, len(fresh) + n_straggling)
         return RoundRecord(
             round_idx=r, cohort=[int(c) for c in clients],
             loss=(sum(losses) / len(losses)) if losses else None,
             n_fresh=stats.n_fresh, n_late=stats.n_late, n_dropped=n_dropped,
             n_straggling=n_straggling, upload_bytes=stats.upload_bytes)
+
+    # -- event-driven clock (fed.simtime) -----------------------------------
+
+    def _dispatch_cohort(self, r: int) -> tuple[np.ndarray, int]:
+        """Sample cohort r at the current virtual time, compute each
+        client's sketch against the *current* params (the snapshot it
+        downloads at dispatch), and enqueue its timed upload event."""
+        fc = self.fed_cfg
+        now = self._now
+        clients = self._cohort(r)
+        rng = _round_rng(fc.seed, r, stream=1)
+        n_dropped = 0
+        for slot, c in enumerate(clients):
+            fate, delay = self._fate(rng)
+            if fate == "dropped":
+                n_dropped += 1
+                continue
+            batch = self._client_batch(int(c))
+            loss, grads = self.grad_fn(self.params, batch)
+            table = self._sketch(grads)
+            prof = self.het.profile(int(c))
+            # a "late" fate under the event clock is a transient slowdown:
+            # this round the client computes (1 + delay)x slower
+            finish = prof.finish_time(now, self.aggregator.table_bytes,
+                                      compute_scale=1.0 + delay)
+            self._queue.push(simtime_lib.Event(
+                time=finish, round_produced=r, slot=slot, client=int(c),
+                produced=now, weight=self._client_weight(int(c), batch),
+                loss=float(loss), table=table))
+        return clients, n_dropped
+
+    def _run_event_round(self, r: int) -> RoundRecord:
+        """One server update of the event loop.
+
+        flat/tree: the barrier sits at the cohort's slowest upload — the
+        queue drains fully and the virtual clock jumps to the last arrival.
+        async: the server updates after ``quorum`` arrivals, merging them
+        through the timed buffer with weight ``w * exp(-lambda * age)``;
+        slower uploads (possibly from older rounds) stay in flight.
+
+        Upload bytes are charged when the bytes hit the wire: every
+        dispatched (non-dropped) client's leaf upload counts in its
+        *dispatch* round — even if the table is still in flight or later
+        dropped as too stale — plus the merge's internal-level forwards
+        (tree backbone edges).  Summed over a run nothing is double-counted
+        and nothing in flight is omitted; for sync policies this equals the
+        merge-level accounting exactly.
+        """
+        fc = self.fed_cfg
+        t_dispatch = self._now
+        clients, n_dropped = self._dispatch_cohort(r)
+        is_async = isinstance(self.aggregator, agg_lib.AsyncBufferedAggregator)
+        n_pop = (min(self.sim_cfg.quorum or fc.clients_per_round,
+                     len(self._queue))
+                 if is_async else len(self._queue))
+        arrivals = [self._queue.pop() for _ in range(n_pop)]
+        if arrivals:
+            self._now = arrivals[-1].time    # heap order: the max popped
+        losses = [e.loss for e in arrivals]
+        bandwidths = [self.het.profile(e.client).bandwidth for e in arrivals]
+        if is_async:
+            for e in arrivals:
+                self.aggregator.submit(e.table, produced_round=e.produced,
+                                       arrival_round=e.time, weight=e.weight)
+            table, stats = self.aggregator.aggregate(
+                [], round_idx=self._now, bandwidths=bandwidths)
+        else:
+            table, stats = self.aggregator.aggregate(
+                [e.table for e in arrivals],
+                weights=[e.weight for e in arrivals],
+                round_idx=r, bandwidths=bandwidths)
+        if stats.total_weight > 0:
+            delta, self.opt_state = self._server(table, self.opt_state,
+                                                 self.lr_fn(r))
+            self.params = self._apply(self.params, delta)
+        n_sent = len(clients) - n_dropped
+        internal = sum(lv.bytes_on_wire for lv in stats.levels[1:])
+        upload = n_sent * self.aggregator.table_bytes + internal
+        self._record_traffic(upload, len(arrivals))
+        return RoundRecord(
+            round_idx=r, cohort=[int(c) for c in clients],
+            loss=(sum(losses) / len(losses)) if losses else None,
+            n_fresh=stats.n_fresh, n_late=stats.n_late, n_dropped=n_dropped,
+            n_straggling=len(self._queue), upload_bytes=upload,
+            t_dispatch=t_dispatch, t_virtual=self._now,
+            critical_path_s=stats.critical_path_s)
 
     # -- driver -------------------------------------------------------------
 
@@ -239,9 +390,12 @@ class Orchestrator:
                         if isinstance(self.aggregator,
                                       agg_lib.AsyncBufferedAggregator)
                         else None)
+                sim = ({"now": self._now, "events": self._queue.state()}
+                       if self.is_event else None)
                 ckpt_lib.save(fc.checkpoint_dir, self.params, self.opt_state,
-                              r, extra={"aggregate": fc.aggregate},
-                              late_buffer=late)
+                              r, extra={"aggregate": fc.aggregate,
+                                        "clock": fc.clock},
+                              late_buffer=late, simtime=sim)
         return FedRunResult(
             losses=[rec.loss for rec in records], records=records,
             traffic=self.meter.compression(fc.clients_per_round),
@@ -251,6 +405,8 @@ class Orchestrator:
                                      if isinstance(self.aggregator,
                                                    agg_lib.AsyncBufferedAggregator)
                                      else 0),
+                    "in_flight": len(self._queue),
+                    "t_virtual": self._now if self.is_event else None,
                     "start_round": self.start_round})
 
 

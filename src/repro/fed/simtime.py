@@ -1,0 +1,219 @@
+"""Discrete-event wall-clock federation: heterogeneous clients, virtual time.
+
+The round-driven orchestrator measures staleness in *round indices* — a
+counter, not time.  Real federations are paced by wall-clock physics:
+every client has its own compute speed, uplink bandwidth, and availability
+windows, so a "round" is whatever interval the slowest relevant upload
+defines.  This module supplies the primitives for the event-driven clock
+(``FederationConfig(clock="event")``):
+
+* ``ClientProfile`` — per-client heterogeneity: seconds of local compute
+  per round, uplink bytes/second, and a periodic availability window
+  (phones charge at night).  ``finish_time`` is the paper-level cost
+  model: ``start + compute_seconds + table_bytes / bandwidth``, where
+  ``start`` defers to the client's next availability window.
+* ``HeterogeneityConfig`` / ``HeterogeneityModel`` — lognormal
+  distributions over compute time and bandwidth (heavy-tailed uplinks are
+  the realistic regime) sampled *deterministically per client id*, so a
+  run is a pure function of ``(seed, config)`` — including across a
+  checkpoint restore.
+* ``Event`` / ``EventQueue`` — a binary-heap future-event list keyed by
+  ``(time, round, slot)``.  The triple is unique per run, so pop order is
+  total and deterministic; ``state()/load_state()`` round-trip through
+  ``fed.checkpoint`` for exact resume.
+* ``SimTimeConfig`` — the event clock's knobs: the exponential staleness
+  discount ``exp(-lambda * age_seconds)`` (the continuous-time limit of
+  the round clock's ``discount**s``), the async update quorum, and the
+  backbone bandwidth of internal tree edges.
+
+The orchestrator's event loop lives in ``fed.orchestrator`` and consumes
+these primitives; by Count Sketch linearity the arrival-order merge is
+still an exact (discount-weighted) sketch of the weighted mean gradient.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any
+
+import numpy as np
+
+# rng stream ids — must not collide with the orchestrator's cohort (0) and
+# fate (1) streams, so profile draws never correlate with cohort sampling.
+PROFILE_STREAM = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientProfile:
+    """One client's wall-clock physics."""
+
+    compute_seconds: float        # local grad+sketch time per round
+    bandwidth: float              # uplink, bytes/second
+    weight: float = 1.0           # merge weight (FedSKETCH-style)
+    avail_period: float = 0.0     # seconds; 0 = always available
+    avail_duty: float = 1.0       # fraction of each period the client is up
+    avail_offset: float = 0.0     # phase shift of the window start
+
+    def __post_init__(self):
+        if self.compute_seconds < 0:
+            raise ValueError("compute_seconds must be >= 0")
+        if self.bandwidth <= 0:
+            raise ValueError("bandwidth must be > 0")
+        if not 0.0 < self.avail_duty <= 1.0:
+            raise ValueError("avail_duty must be in (0, 1]")
+
+    def next_available(self, t: float) -> float:
+        """Earliest time >= t inside this client's availability window."""
+        if self.avail_period <= 0 or self.avail_duty >= 1.0:
+            return t
+        span = self.avail_duty * self.avail_period
+        phase = (t - self.avail_offset) % self.avail_period
+        return t if phase < span else t + (self.avail_period - phase)
+
+    def upload_seconds(self, n_bytes: int) -> float:
+        return n_bytes / self.bandwidth
+
+    def finish_time(self, t: float, table_bytes: int, *,
+                    compute_scale: float = 1.0) -> float:
+        """When this client's sketch lands at the server, dispatched at t."""
+        start = self.next_available(t)
+        return (start + self.compute_seconds * compute_scale
+                + self.upload_seconds(table_bytes))
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneityConfig:
+    """Distributions the per-client profiles are sampled from.
+
+    Compute time and bandwidth are lognormal (median * exp(sigma * N(0,1)))
+    — sigma=0 collapses to a homogeneous population, sigma ~ 1+ gives the
+    heavy-tailed uplink spread real device fleets show.  Availability duty
+    is uniform in [duty_min, duty_max] with a random phase.
+    """
+
+    compute_median: float = 1.0       # seconds per local round
+    compute_sigma: float = 0.5
+    bandwidth_median: float = 1e6     # bytes/second uplink
+    bandwidth_sigma: float = 1.0
+    weight_sigma: float = 0.0         # lognormal client-weight spread
+    avail_period: float = 0.0         # 0 = everyone always available
+    avail_duty_min: float = 1.0
+    avail_duty_max: float = 1.0
+
+    def __post_init__(self):
+        if self.compute_median < 0 or self.bandwidth_median <= 0:
+            raise ValueError("medians must be positive")
+        if not 0.0 < self.avail_duty_min <= self.avail_duty_max <= 1.0:
+            raise ValueError("need 0 < duty_min <= duty_max <= 1")
+
+
+class HeterogeneityModel:
+    """Deterministic client_id -> ClientProfile sampler (cached)."""
+
+    def __init__(self, cfg: HeterogeneityConfig, seed: int = 0):
+        self.cfg = cfg
+        self.seed = seed
+        self._cache: dict[int, ClientProfile] = {}
+
+    def profile(self, client_id: int) -> ClientProfile:
+        prof = self._cache.get(client_id)
+        if prof is None:
+            cfg = self.cfg
+            rng = np.random.default_rng((self.seed, client_id,
+                                         PROFILE_STREAM))
+            compute = cfg.compute_median * float(
+                np.exp(cfg.compute_sigma * rng.standard_normal()))
+            bw = cfg.bandwidth_median * float(
+                np.exp(cfg.bandwidth_sigma * rng.standard_normal()))
+            weight = float(np.exp(cfg.weight_sigma * rng.standard_normal()))
+            duty = float(rng.uniform(cfg.avail_duty_min, cfg.avail_duty_max))
+            offset = (float(rng.uniform(0.0, cfg.avail_period))
+                      if cfg.avail_period > 0 else 0.0)
+            prof = ClientProfile(
+                compute_seconds=compute, bandwidth=bw, weight=weight,
+                avail_period=cfg.avail_period, avail_duty=duty,
+                avail_offset=offset)
+            self._cache[client_id] = prof
+        return prof
+
+
+@dataclasses.dataclass(frozen=True)
+class SimTimeConfig:
+    """Knobs of the event-driven clock."""
+
+    staleness_lambda: float = 0.05    # discount exp(-lambda * age_seconds)
+    max_age: float | None = None      # drop contributions older than this
+    quorum: int | None = None         # async: update every q arrivals
+                                      # (None = clients_per_round)
+    link_bandwidth: float = 1e8       # backbone bytes/s: internal tree edges
+    heterogeneity: HeterogeneityConfig = HeterogeneityConfig()
+
+    def __post_init__(self):
+        if self.staleness_lambda < 0:
+            raise ValueError("staleness_lambda must be >= 0")
+        if self.quorum is not None and self.quorum < 1:
+            raise ValueError("quorum must be >= 1")
+
+
+@dataclasses.dataclass
+class Event:
+    """One sketch upload landing at the server."""
+
+    time: float           # arrival (virtual seconds)
+    round_produced: int   # dispatch round — tie-break + staleness reporting
+    slot: int             # index within the dispatch cohort — tie-break
+    client: int
+    produced: float       # dispatch time: the params snapshot this grad saw
+    weight: float
+    loss: float
+    table: Any            # (rows, cols) sketch
+
+    def key(self) -> tuple[float, int, int]:
+        return (self.time, self.round_produced, self.slot)
+
+    def meta(self) -> dict:
+        """JSON-serializable fields (the table ships separately)."""
+        return {"time": float(self.time),
+                "round_produced": int(self.round_produced),
+                "slot": int(self.slot), "client": int(self.client),
+                "produced": float(self.produced),
+                "weight": float(self.weight), "loss": float(self.loss)}
+
+
+class EventQueue:
+    """Future-event list with total, deterministic pop order.
+
+    Heap keys are ``(time, round, slot)`` — unique per run, so the payload
+    is never compared and simultaneous arrivals pop in dispatch order,
+    which is what makes the RoundRecord stream byte-identical across a
+    checkpoint/restore.
+    """
+
+    def __init__(self):
+        self._heap: list[tuple[tuple[float, int, int], Event]] = []
+
+    def push(self, ev: Event) -> None:
+        heapq.heappush(self._heap, (ev.key(), ev))
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[1]
+
+    def peek_time(self) -> float | None:
+        return self._heap[0][0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def events(self) -> list[Event]:
+        """Queue contents in pop order (non-destructive)."""
+        return [ev for _, ev in sorted(self._heap, key=lambda kv: kv[0])]
+
+    def state(self) -> list[Event]:
+        """Checkpoint form: events in pop order (see ``fed.checkpoint``)."""
+        return self.events()
+
+    def load_state(self, events: list[Event]) -> None:
+        self._heap = []
+        for ev in events:
+            self.push(ev)

@@ -104,6 +104,8 @@ def run_simulation(cfg, *, method: str = "fetchsgd", rounds: int = 30,
         extras["fs_cfg"] = fs_cfg
         extras["fed_records"] = res.records
         extras["pending_late"] = res.extras["pending_late"]
+        extras["in_flight"] = res.extras["in_flight"]
+        extras["t_virtual"] = res.extras["t_virtual"]
         return SimResult(method=method,
                          losses=[l if l is not None else float("nan")
                                  for l in res.losses],
@@ -215,6 +217,8 @@ def main(argv=None):
 
         PYTHONPATH=src python -m repro.launch.simulate \
             --aggregate tree --rounds 5
+        PYTHONPATH=src python -m repro.launch.simulate \
+            --clock event --aggregate async --rounds 5 --bw-sigma 2.0
     """
     import argparse
 
@@ -236,10 +240,48 @@ def main(argv=None):
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--peak-lr", type=float, default=0.2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--weight-by", default="uniform",
+                    choices=("uniform", "samples", "profile"),
+                    help="per-client merge weights (FedSKETCH-style)")
+    # event clock (fed.simtime): wall-clock federation over heterogeneous
+    # client profiles
+    ap.add_argument("--clock", default="round", choices=("round", "event"))
+    ap.add_argument("--quorum", type=int, default=None,
+                    help="event+async: server updates every N arrivals")
+    ap.add_argument("--staleness-lambda", type=float, default=0.05,
+                    help="event: discount exp(-lambda * age_seconds)")
+    ap.add_argument("--max-age", type=float, default=None,
+                    help="event: drop contributions older than this (s)")
+    ap.add_argument("--link-bandwidth", type=float, default=1e8,
+                    help="event: backbone bytes/s for internal tree edges")
+    ap.add_argument("--compute-median", type=float, default=1.0,
+                    help="event: median client compute seconds/round")
+    ap.add_argument("--compute-sigma", type=float, default=0.5)
+    ap.add_argument("--bw-median", type=float, default=1e6,
+                    help="event: median client uplink bytes/s")
+    ap.add_argument("--bw-sigma", type=float, default=1.0,
+                    help="event: lognormal uplink spread (2+ = heavy skew)")
+    ap.add_argument("--avail-period", type=float, default=0.0,
+                    help="event: availability window period (0 = always up)")
+    ap.add_argument("--avail-duty-min", type=float, default=1.0)
+    ap.add_argument("--avail-duty-max", type=float, default=1.0)
     args = ap.parse_args(argv)
 
     cfg = micro_cfg()
     dataset = micro_dataset(cfg, seed=args.seed)
+    simtime = None
+    if args.clock == "event":
+        simtime = fed.SimTimeConfig(
+            staleness_lambda=args.staleness_lambda, max_age=args.max_age,
+            quorum=args.quorum, link_bandwidth=args.link_bandwidth,
+            heterogeneity=fed.HeterogeneityConfig(
+                compute_median=args.compute_median,
+                compute_sigma=args.compute_sigma,
+                bandwidth_median=args.bw_median,
+                bandwidth_sigma=args.bw_sigma,
+                avail_period=args.avail_period,
+                avail_duty_min=args.avail_duty_min,
+                avail_duty_max=args.avail_duty_max))
     fed_cfg = fed.FederationConfig(
         rounds=args.rounds, clients_per_round=args.clients_per_round,
         min_clients_per_round=args.min_clients_per_round,
@@ -248,6 +290,7 @@ def main(argv=None):
         straggler=fed.StragglerModel(dropout_prob=args.dropout_prob,
                                      straggle_prob=args.straggle_prob,
                                      max_delay=args.max_delay),
+        clock=args.clock, simtime=simtime, weight_by=args.weight_by,
         seed=args.seed, checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every)
     res = run_simulation(cfg, method=args.method, rounds=args.rounds,
@@ -256,7 +299,8 @@ def main(argv=None):
                          seed=args.seed, aggregate=args.aggregate,
                          fed_cfg=fed_cfg if args.method == "fetchsgd"
                          else None)
-    print(f"method={args.method} aggregate={args.aggregate}")
+    print(f"method={args.method} aggregate={args.aggregate} "
+          f"clock={args.clock}")
     if not res.losses:
         print(f"nothing to do: checkpoint in {args.checkpoint_dir} already "
               f"covers all {args.rounds} rounds")
@@ -265,12 +309,20 @@ def main(argv=None):
         rec = (res.extras.get("fed_records") or [None] * len(res.losses))[r]
         detail = (f"  fresh={rec.n_fresh} late={rec.n_late} "
                   f"dropped={rec.n_dropped}" if rec else "")
+        if rec and rec.t_virtual is not None:
+            detail += (f" t={rec.t_virtual:8.1f}s"
+                       f" critical_path={rec.critical_path_s:6.1f}s"
+                       f" in_flight={rec.n_straggling}")
         print(f"round {rec.round_idx if rec else r}: "
               f"loss {loss:.4f}{detail}")
     t = res.traffic
     print(f"traffic: up={t['upload_bytes']/1e6:.2f}MB "
           f"down={t['download_bytes']/1e6:.2f}MB "
           f"compression {t['total_x']:.1f}x")
+    if res.extras.get("t_virtual") is not None:
+        print(f"virtual wall-clock: {res.extras['t_virtual']:.1f}s for "
+              f"{len(res.losses)} rounds "
+              f"({res.extras['in_flight']} uploads still in flight)")
     assert np.isfinite(res.losses[-1]), \
         "non-finite final loss (diverged, or no client participated)"
     return res

@@ -176,6 +176,7 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
                     fs_cfg: F.FetchSGDConfig, *,
                     aggregate: str = "sketch",
                     sketch_mode: str = "gathered",
+                    weighted: bool = False,
                     donate: bool = False) -> StepBundle:
     """FetchSGD train step, parameterized by sketch aggregation policy.
 
@@ -192,13 +193,24 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
       buffer delayed rounds;
     * ``'dense'``  — psum the full d-dim gradient (roofline baseline).
 
-    Returns fn(params, opt_state, batch, lr[, fresh_w, inject, inject_w])
-    -> (params, opt_state, metrics).
+    ``weighted=True`` (sketch/tree only) appends one trailing step arg: a
+    per-client-shard weight vector (one entry per manual-mesh shard), and
+    the merge becomes the exact weighted mean ``psum(w*t)/psum(w)``
+    (FedSKETCH-style, still just sketch linearity).
+
+    Returns fn(params, opt_state, batch, lr[, fresh_w, inject, inject_w]
+    [, weight]) -> (params, opt_state, metrics).
     """
     if aggregate == "flat":
         aggregate = "sketch"
     if aggregate not in ("sketch", "tree", "async", "dense"):
         raise ValueError(f"unknown aggregate policy {aggregate!r}")
+    if weighted and aggregate not in ("sketch", "tree"):
+        raise ValueError("weighted merging needs aggregate='sketch'|'tree' "
+                         f"(got {aggregate!r})")
+    if weighted and sketch_mode == "model_local":
+        raise ValueError("weighted merging is not wired into the "
+                         "model_local pipeline")
     axes = manual_axes(mesh)
     p_sds, p_shard = param_structs(cfg, mesh)
     b_sds, b_shard = batch_structs(cfg, shape, mesh)
@@ -234,7 +246,7 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
                                    view_shardings=view_sh)
         return new_params, new_state
 
-    def body(params, opt_state, batch, lr):
+    def body(params, opt_state, batch, lr, *maybe_w):
         loss, grads = _loss_grads(params, batch)
         sidx = jax.lax.axis_index("data") if has_ep else None
         if aggregate in ("sketch", "tree"):
@@ -244,7 +256,8 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
                                    shard_idx=sidx, local=has_ep,
                                    view_shardings=view_sh)
             table = fed_agg.mesh_aggregate(
-                table, axes, policy="tree" if aggregate == "tree" else "flat")
+                table, axes, policy="tree" if aggregate == "tree" else "flat",
+                weight=maybe_w[0][0] if maybe_w else None)
             new_params, new_state = _server_apply(params, opt_state, table,
                                                   lr, sidx)
         elif aggregate == "dense":
@@ -310,9 +323,10 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
             out_specs=(p_manual, opt_spec, {"loss": P(), "table": P()}),
             axis_names=set(axes), check_vma=False)
     else:
+        w_specs = (P(axes),) if weighted else ()
         sm = _shard_map(
             body, mesh=mesh,
-            in_specs=(p_manual, opt_spec, b_manual, P()),
+            in_specs=(p_manual, opt_spec, b_manual, P()) + w_specs,
             out_specs=(p_manual, opt_spec, {"loss": P()}),
             axis_names=set(axes), check_vma=False)
     # donation aliases params/opt in production (TPU); the CPU runtime
@@ -330,6 +344,9 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
                    jax.ShapeDtypeStruct((fs_cfg.rows, fs_cfg.cols),
                                         jnp.float32),
                    jax.ShapeDtypeStruct((), jnp.float32))
+    if weighted:
+        inputs += (jax.ShapeDtypeStruct((_meshprod(mesh, axes),),
+                                        jnp.float32),)
     return StepBundle(fn=fn, inputs=inputs, layout=layout)
 
 

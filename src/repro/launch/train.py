@@ -57,6 +57,14 @@ def main():
     ap.add_argument("--straggle-prob", type=float, default=0.3,
                     help="async: probability a round's cohort reports late")
     ap.add_argument("--staleness-discount", type=float, default=0.9)
+    ap.add_argument("--clock", default="round", choices=("round", "event"),
+                    help="async: measure staleness in rounds or in virtual "
+                         "seconds from heterogeneous upload times")
+    ap.add_argument("--staleness-lambda", type=float, default=0.05,
+                    help="event clock: discount exp(-lambda * age_seconds)")
+    ap.add_argument("--compute-median", type=float, default=1.0)
+    ap.add_argument("--bw-median", type=float, default=1e6)
+    ap.add_argument("--bw-sigma", type=float, default=1.0)
     args = ap.parse_args()
 
     if args.debug_mesh:
@@ -86,10 +94,29 @@ def main():
           f"aggregate={args.aggregate}")
 
     is_async = args.aggregate == "async"
+    is_event = args.clock == "event"
+    if is_event and not is_async:
+        # the event clock only drives the host-side staleness buffer; a
+        # silent no-op on sync policies would masquerade as a wall-clock run
+        raise SystemExit("--clock event requires --aggregate async here; "
+                         "for sync policies under the event clock use "
+                         "repro.launch.simulate --clock event")
     if is_async:
         buf = fed_agg.AsyncBufferedAggregator(
-            fs, discount=args.staleness_discount)
+            fs, discount=args.staleness_discount,
+            staleness_lambda=args.staleness_lambda if is_event else None)
         straggle_rng = np.random.default_rng(1234)
+    if is_event:
+        # virtual wall-clock: each round's cohort gets a heterogeneity
+        # profile; a straggled round's table arrives when its (2x slower)
+        # compute + upload lands, and is discounted by exp(-lambda * age)
+        from repro.fed import simtime as fed_sim
+        het = fed_sim.HeterogeneityModel(fed_sim.HeterogeneityConfig(
+            compute_median=args.compute_median,
+            bandwidth_median=args.bw_median,
+            bandwidth_sigma=args.bw_sigma), seed=1234)
+        table_bytes = F.upload_bytes(fs)
+        now = 0.0
     with mesh:
         for r in range(args.rounds):
             cb = ds.client_batch(r % 256)
@@ -103,7 +130,8 @@ def main():
                     (args.global_batch, cfg.enc_seq, cfg.d_model))
             t0 = time.time()
             if is_async:
-                inject, inject_w, n_late, max_s = buf.drain(r)
+                t_now = now if is_event else r
+                inject, inject_w, n_late, max_s = buf.drain(t_now)
                 # the last round always lands on time so training never ends
                 # with an unapplied cohort
                 straggle = (straggle_rng.random() < args.straggle_prob
@@ -112,12 +140,26 @@ def main():
                     params, opt, batch, jnp.float32(lr_fn(r)),
                     jnp.float32(0.0 if straggle else 1.0), inject,
                     jnp.float32(inject_w))
+                if is_event:
+                    prof = het.profile(r % 256)
+                    arrive = prof.finish_time(
+                        now, table_bytes,
+                        compute_scale=2.0 if straggle else 1.0)
                 if straggle:
-                    buf.submit(m["table"], produced_round=r,
-                               arrival_round=r + 1)
+                    buf.submit(m["table"], produced_round=t_now,
+                               arrival_round=(arrive if is_event else r + 1))
+                    # the server paces on without the straggler: advance by
+                    # the nominal round duration, not the slow upload
+                    if is_event:
+                        now += args.compute_median
+                elif is_event:
+                    now = max(now, arrive)
+                unit = "s" if is_event else ""
                 tag = (" [straggled]" if straggle else
-                       f" [late merged: {n_late}, staleness {max_s}]"
-                       if n_late else "")
+                       f" [late merged: {n_late}, "
+                       f"staleness {max_s:.1f}{unit}]" if n_late else "")
+                if is_event:
+                    tag += f" t={now:.1f}s"
             else:
                 params, opt, m = bundle.fn(params, opt, batch,
                                            jnp.float32(lr_fn(r)))

@@ -66,6 +66,65 @@ def test_train_step_runs_and_matches_single_host():
 
 
 @pytest.mark.slow
+def test_weighted_train_step_matches_weighted_reference():
+    """make_train_step(weighted=True) on a real multi-shard mesh: the
+    psum(w*t)/psum(w) merge must equal the single-host sketch of the
+    identically weighted gradient mean, for flat and tree alike.  (The
+    size-1-axis test in test_simtime.py degenerates to the identity; this
+    exercises the P(axes) weight spec and both reduction topologies.)"""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import configs
+        from repro.core import fetchsgd as F, layout as L
+        from repro.launch import shapes, steps
+        from repro.models import transformer
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        cfg = configs.get_smoke("internlm2-1.8b")
+        fs = F.FetchSGDConfig(rows=3, cols=4096, k=64, momentum=0.9)
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+        batch = {"tokens": tok, "labels": tok}
+        w = jnp.asarray([0.5, 2.5], jnp.float32)   # one weight per data shard
+        outs = {}
+        for agg in ("flat", "tree"):
+            bundle = steps.make_train_step(
+                cfg, shapes.ShapeSpec("t", "train", 32, 4), mesh, fs,
+                aggregate=agg, weighted=True)
+            with mesh:
+                p2, o2, m = bundle.fn(params, F.init_state(fs), batch,
+                                      jnp.float32(0.1), w)
+            assert np.isfinite(float(m["loss"]))
+            outs[agg] = p2
+        # weighted flat == weighted tree (same weighted mean, by linearity)
+        tdiff = max(float(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32)).max())
+                    for a, b in zip(jax.tree.leaves(outs["flat"]),
+                                    jax.tree.leaves(outs["tree"])))
+        # single-host reference: weighted mean of per-shard gradients
+        lay = L.build_layout(params)
+        gs, ws = [], [0.5, 2.5]
+        for i in range(2):
+            shard = {k: v[2*i:2*i+2] for k, v in batch.items()}
+            (_, _), g = jax.value_and_grad(
+                lambda p: transformer.loss_fn(p, shard, cfg),
+                has_aux=True)(params)
+            gs.append(g)
+        gmean = jax.tree.map(
+            lambda a, b: (ws[0]*a + ws[1]*b) / (ws[0] + ws[1]), *gs)
+        p_ref, _, _ = F.step(params, gmean, F.init_state(fs), 0.1, lay, fs)
+        rdiff = max(float(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32)).max())
+                    for a, b in zip(jax.tree.leaves(outs["flat"]),
+                                    jax.tree.leaves(p_ref)))
+        print("TDIFF", tdiff, "RDIFF", rdiff)
+        assert tdiff < 1e-5, tdiff
+        # near-tie top-k swaps allowed, as in the unweighted parity test
+        assert rdiff < 0.15, rdiff
+    """)
+    assert "RDIFF" in out
+
+
+@pytest.mark.slow
 def test_decode_and_prefill_compile_and_run():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np

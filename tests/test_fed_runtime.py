@@ -107,6 +107,46 @@ class TestBytesAccounting:
         assert levels[0].n_messages == 1
 
 
+class TestDegenerateAccounting:
+    """n=1 cohorts and empty rounds must report exact, not phantom, stats."""
+
+    @pytest.mark.parametrize("make", [
+        lambda: FlatAggregator(CFG),
+        lambda: TreeAggregator(CFG, fanout=2),
+        lambda: AsyncBufferedAggregator(CFG),
+    ], ids=["flat", "tree", "async"])
+    def test_empty_round_has_no_levels(self, make):
+        _, stats = make().aggregate([])
+        assert stats.levels == ()
+        assert stats.upload_bytes == 0
+        assert stats.root_ingress_tables == 0
+        assert stats.critical_path_s == 0.0
+        assert stats.total_weight == 0
+
+    def test_single_client_tree_is_one_direct_message(self, rng):
+        t = _tables(rng, 1)
+        flat, fs = FlatAggregator(CFG).aggregate(t)
+        tree, ts = TreeAggregator(CFG, fanout=4).aggregate(t)
+        # one client: no internal forwards, tree == flat in bytes and fan-in
+        assert ts.upload_bytes == fs.upload_bytes == F.upload_bytes(CFG)
+        assert ts.root_ingress_tables == fs.root_ingress_tables == 1
+        assert len(ts.levels) == 1
+        np.testing.assert_array_equal(np.asarray(tree), np.asarray(flat))
+
+    def test_core_tree_level_bytes_degenerate(self):
+        assert F.tree_level_bytes(100, 0, 4) == []
+        assert F.tree_level_bytes(100, 1, 4) == [(1, 100)]
+
+    def test_async_late_only_round_counts_messages(self, rng):
+        t = _tables(rng, 1)
+        agg = AsyncBufferedAggregator(CFG)
+        agg.submit(t[0], produced_round=0, arrival_round=1)
+        _, stats = agg.aggregate([], round_idx=1)
+        assert stats.n_fresh == 0 and stats.n_late == 1
+        assert stats.root_ingress_tables == 1
+        assert stats.upload_bytes == F.upload_bytes(CFG)
+
+
 class TestOrchestrator:
     @pytest.fixture(scope="class")
     def micro(self):

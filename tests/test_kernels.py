@@ -12,6 +12,12 @@ SHAPES = [(64,), (513,), (1000,), (4096,), (12345,)]
 DTYPES = [jnp.float32, jnp.bfloat16]
 TABLES = [(3, 256), (5, 1024), (1, 128), (7, 8192)]
 
+# edge sweep: non-power-of-two lengths (incl. n < block and n == 1), cols
+# that are 128-multiples but not powers of two, odd/even row counts beyond
+# the happy sizes above
+EDGE_SHAPES = [1, 127, 129, 3000]
+EDGE_TABLES = [(2, 384), (9, 640), (4, 1920)]
+
 
 @pytest.mark.parametrize("n", [s[0] for s in SHAPES])
 @pytest.mark.parametrize("dtype", DTYPES, ids=str)
@@ -75,3 +81,43 @@ def test_mergeability_across_impls(rng):
     t2 = ops.sketch_encode(jnp.asarray(g[500:]), 500, 3, 512, impl="xla")
     whole = ref.sketch_encode(jnp.asarray(g), 0, 3, 512)
     np.testing.assert_allclose(t1 + t2, whole, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", EDGE_SHAPES)
+@pytest.mark.parametrize("rows,cols", EDGE_TABLES)
+def test_encode_edge_shapes(rng, n, rows, cols):
+    """Pallas encode at the awkward sizes: n not a power of two (down to a
+    single element, forcing near-total block padding), cols a 128-multiple
+    that is not a power of two, odd row counts."""
+    v = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    out = pk.sketch_encode(v, 321, rows, cols, key=3, interpret=True)
+    want = ref.sketch_encode(v, 321, rows, cols, key=3)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1, 127, 3000])
+@pytest.mark.parametrize("rows,cols", [(2, 384), (9, 640)])
+def test_estimate_edge_shapes(rng, n, rows, cols):
+    v = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    tbl = ref.sketch_encode(v, 55, rows, cols, key=4)
+    out = pk.sketch_estimate(tbl, 55, n, key=4, interpret=True)
+    want = ref.sketch_estimate(tbl, 55, n, key=4)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("cols", [130, 300, 1000])
+def test_non_lane_multiple_cols(rng, cols):
+    """cols % 128 != 0: the raw Pallas kernels refuse loudly, and the ops
+    dispatcher transparently falls back to the XLA path with identical
+    hash identity (vs the oracle)."""
+    v = jnp.asarray(rng.normal(size=500).astype(np.float32))
+    with pytest.raises(ValueError, match="128"):
+        pk.sketch_encode(v, 0, 3, cols, interpret=True)
+    with pytest.raises(ValueError, match="128"):
+        pk.sketch_estimate(jnp.zeros((3, cols)), 0, 500, interpret=True)
+    out = ops.sketch_encode(v, 0, 3, cols, impl="auto")
+    want = ref.sketch_encode(v, 0, 3, cols)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+    est = ops.sketch_estimate(out, 0, 500, impl="auto")
+    np.testing.assert_allclose(est, ref.sketch_estimate(want, 0, 500),
+                               rtol=1e-5, atol=1e-5)

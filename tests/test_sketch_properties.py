@@ -1,0 +1,154 @@
+"""Property tests for the invariants the federation runtime leans on.
+
+Everything `repro.fed` does — flat/tree/async merge topologies, weighted
+per-client merging, staleness-discounted late folding — is sound only
+because the Count Sketch is a *linear* map.  These tests state that
+contract as properties over random inputs (hypothesis), not just at
+hand-picked sizes:
+
+* linearity:      sketch(a*g1 + b*g2) == a*S(g1) + b*S(g2)
+* permutation:    merge order never changes the aggregate (up to float
+                  summation tolerance), so flat == tree == async-no-late
+* weighted merge: the weighted sketch mean equals the sketch of the dense
+                  weighted mean gradient (FedSKETCH-style weights are
+                  exact, not approximate)
+
+hypothesis is an optional dev dependency (requirements-dev.txt); the whole
+module skips when it is absent.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import fetchsgd as F  # noqa: E402
+from repro.fed import (AsyncBufferedAggregator, FlatAggregator,  # noqa: E402
+                       TreeAggregator)
+from repro.kernels import ref  # noqa: E402
+
+ROWS, COLS, KEY = 3, 512, 7
+CFG = F.FetchSGDConfig(rows=ROWS, cols=COLS, k=32)
+
+# modest example counts: every example pays a jnp dispatch, and CI runs
+# this file in the tier-2 budget
+SETTINGS = settings(max_examples=20, deadline=None)
+
+
+def _vec(seed: int, n: int) -> jnp.ndarray:
+    return jnp.asarray(np.random.default_rng(seed)
+                       .normal(size=n).astype(np.float32))
+
+
+def _tables(seed: int, k: int) -> list[jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(size=(ROWS, COLS)).astype(np.float32))
+            for _ in range(k)]
+
+
+class TestLinearity:
+    @SETTINGS
+    @given(seed=st.integers(0, 2**32 - 1),
+           n=st.integers(1, 2000),
+           a=st.floats(-4, 4, allow_nan=False, width=32),
+           b=st.floats(-4, 4, allow_nan=False, width=32))
+    def test_sketch_is_linear(self, seed, n, a, b):
+        g1, g2 = _vec(seed, n), _vec(seed + 1, n)
+        lhs = ref.sketch_encode(a * g1 + b * g2, 0, ROWS, COLS, KEY)
+        rhs = (a * ref.sketch_encode(g1, 0, ROWS, COLS, KEY)
+               + b * ref.sketch_encode(g2, 0, ROWS, COLS, KEY))
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   rtol=1e-4, atol=1e-4)
+
+    @SETTINGS
+    @given(seed=st.integers(0, 2**32 - 1), n=st.integers(2, 3000),
+           split=st.integers(1, 2999))
+    def test_chunk_offsets_compose(self, seed, n, split):
+        """Sketching two chunks at their global offsets sums to the whole."""
+        split = min(split, n - 1)
+        g = _vec(seed, n)
+        whole = ref.sketch_encode(g, 0, ROWS, COLS, KEY)
+        parts = (ref.sketch_encode(g[:split], 0, ROWS, COLS, KEY)
+                 + ref.sketch_encode(g[split:], split, ROWS, COLS, KEY))
+        np.testing.assert_allclose(np.asarray(parts), np.asarray(whole),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestMergeInvariance:
+    @SETTINGS
+    @given(seed=st.integers(0, 2**32 - 1), k=st.integers(1, 12),
+           fanout=st.integers(2, 5))
+    def test_policies_agree_and_permutation_invariant(self, seed, k, fanout):
+        """flat == tree == async-with-no-late, under any merge order."""
+        tables = _tables(seed, k)
+        flat, _ = FlatAggregator(CFG).aggregate(tables)
+        tree, _ = TreeAggregator(CFG, fanout=fanout).aggregate(tables)
+        asyn, stats = AsyncBufferedAggregator(CFG).aggregate(tables)
+        perm = np.random.default_rng(seed + 2).permutation(k)
+        shuffled, _ = FlatAggregator(CFG).aggregate([tables[i] for i in perm])
+        ref_t = np.asarray(flat)
+        for other in (tree, asyn, shuffled):
+            np.testing.assert_allclose(np.asarray(other), ref_t,
+                                       rtol=1e-5, atol=1e-5)
+        assert stats.n_late == 0
+
+    @SETTINGS
+    @given(seed=st.integers(0, 2**32 - 1), k=st.integers(1, 10),
+           fanout=st.integers(2, 4))
+    def test_weighted_policies_agree(self, seed, k, fanout):
+        tables = _tables(seed, k)
+        w = np.random.default_rng(seed + 3).uniform(0.1, 3.0, size=k).tolist()
+        flat, _ = FlatAggregator(CFG).aggregate(tables, weights=w)
+        tree, _ = TreeAggregator(CFG, fanout=fanout).aggregate(tables,
+                                                               weights=w)
+        perm = np.random.default_rng(seed + 4).permutation(k)
+        shuffled, _ = FlatAggregator(CFG).aggregate(
+            [tables[i] for i in perm], weights=[w[i] for i in perm])
+        np.testing.assert_allclose(np.asarray(tree), np.asarray(flat),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(shuffled), np.asarray(flat),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestWeightedExactness:
+    @SETTINGS
+    @given(seed=st.integers(0, 2**32 - 1), k=st.integers(1, 8),
+           n=st.integers(4, 1500))
+    def test_weighted_sketch_mean_is_sketch_of_weighted_mean(self, seed, k,
+                                                             n):
+        """By linearity the weighted merge is *exact*: merging per-client
+        sketches with weights w equals sketching the dense weighted mean
+        gradient directly — the server never sees an approximation beyond
+        the sketch itself."""
+        rng = np.random.default_rng(seed)
+        grads = [jnp.asarray(rng.normal(size=n).astype(np.float32))
+                 for _ in range(k)]
+        w = rng.uniform(0.1, 3.0, size=k)
+        tables = [ref.sketch_encode(g, 0, ROWS, COLS, KEY) for g in grads]
+        merged, stats = FlatAggregator(CFG).aggregate(tables,
+                                                      weights=w.tolist())
+        dense_mean = sum(wi * g for wi, g in zip(w, grads)) / w.sum()
+        direct = ref.sketch_encode(dense_mean, 0, ROWS, COLS, KEY)
+        np.testing.assert_allclose(np.asarray(merged), np.asarray(direct),
+                                   rtol=1e-4, atol=1e-4)
+        assert stats.total_weight == pytest.approx(w.sum(), rel=1e-6)
+
+    @SETTINGS
+    @given(seed=st.integers(0, 2**32 - 1), age=st.floats(0.0, 50.0,
+                                                         allow_nan=False))
+    def test_timed_discount_matches_closed_form(self, seed, age):
+        """Event-clock staleness: a table aged ``age`` seconds merges with
+        weight exp(-lambda * age), exactly."""
+        lam = 0.1
+        t1, t2 = _tables(seed, 2)
+        agg = AsyncBufferedAggregator(CFG, staleness_lambda=lam)
+        agg.submit(t1, produced_round=0.0, arrival_round=1e-3)
+        now = max(age, 1e-3)   # arrived at 1e-3, merged at `now`
+        merged, _ = agg.aggregate([t2], round_idx=now)
+        disc = float(np.exp(-lam * now))
+        expect = (np.asarray(t2) + disc * np.asarray(t1)) / (1.0 + disc)
+        np.testing.assert_allclose(np.asarray(merged), expect,
+                                   rtol=1e-5, atol=1e-5)
