@@ -4,16 +4,23 @@ Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the full
 (arch x shape) matrix come from ``python -m repro.launch.dryrun --all``
 (see EXPERIMENTS.md §Dry-run / §Roofline); this harness covers the
 paper-reproduction benches + kernel micro-benchmarks, all CPU-runnable.
+
+    python -m benchmarks.run                      # everything, CSV
+    python -m benchmarks.run --only kernels       # one family
+    python -m benchmarks.run --json               # + BENCH_<family>.json
+                                                  #   (see EXPERIMENTS.md
+                                                  #    §Perf trajectory)
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 from . import (bench_aggregation_modes, bench_compression, bench_convergence,
                bench_kernels, bench_simtime, bench_sketch_aggregation,
-               bench_true_topk)
+               bench_true_topk, trajectory)
 
 MODULES = [
     ("table1", bench_compression),
@@ -26,14 +33,39 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, metavar="LABEL",
+                    help="run a single bench family "
+                         f"({', '.join(label for label, _ in MODULES)})")
+    ap.add_argument("--json", action="store_true",
+                    help="persist each family's rows as BENCH_<label>.json")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_*.json (default: cwd)")
+    args = ap.parse_args(argv)
+
+    modules = MODULES
+    if args.only is not None:
+        modules = [(label, mod) for label, mod in MODULES
+                   if label == args.only]
+        if not modules:
+            print(f"# FAILED: unknown bench family {args.only!r} "
+                  f"(have: {[label for label, _ in MODULES]})",
+                  file=sys.stderr)
+            sys.exit(1)
+
     print("name,us_per_call,derived")
     failed = []
-    for label, mod in MODULES:
+    for label, mod in modules:
         try:
+            rows = []
             for name, us, derived in mod.run():
+                rows.append((name, us, derived))
                 print(f"{name},{us:.1f},{derived}")
                 sys.stdout.flush()
+            if args.json:
+                path = trajectory.write(label, rows, out_dir=args.out_dir)
+                print(f"# wrote {path}", file=sys.stderr)
         except Exception:
             traceback.print_exc()
             failed.append(label)

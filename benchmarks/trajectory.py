@@ -1,0 +1,112 @@
+"""Persisted perf trajectory: machine-readable ``BENCH_<name>.json``.
+
+Every speed claim in this repo should land with a number a later PR can
+be compared against.  ``python -m benchmarks.run --json`` routes each
+bench family's rows through :func:`write`, producing one
+``BENCH_<name>.json`` per family with a fixed schema:
+
+    {
+      "schema": 1,
+      "bench": "kernels",
+      "created_utc": "2026-08-08T12:34:56Z",
+      "env": {"jax": "...", "backend": "cpu", "device": "cpu",
+              "n_devices": 1, "python": "...", "platform": "..."},
+      "results": [
+        {"name": "kernel_encode_xla_n65536", "us_per_call": 1234.5,
+         "derived": "53.1Melem_per_s"},
+        ...
+      ]
+    }
+
+The ``env`` fingerprint (``repro.obs.env_fingerprint``) is what makes a
+trajectory honest: a CPU-interpret number and a TPU-compiled number are
+different points, not a regression.  CI runs the kernels family every
+build and uploads the file as an artifact — the trajectory accumulates
+from there.
+"""
+
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import re
+
+SCHEMA_VERSION = 1
+
+
+def sanitize(name: str) -> str:
+    """Bench-family label -> filename-safe token (``fig3/4/5`` -> ``fig3_4_5``)."""
+    return re.sub(r"[^A-Za-z0-9._-]+", "_", name).strip("_")
+
+
+def bench_path(name: str, out_dir: str = ".") -> str:
+    return os.path.join(out_dir, f"BENCH_{sanitize(name)}.json")
+
+
+def write(name: str, rows: list[tuple[str, float, str]],
+          out_dir: str = ".") -> str:
+    """Persist one bench family's rows; returns the file path.
+
+    ``rows`` are the harness's ``(name, us_per_call, derived)`` triples —
+    exactly what each ``benchmarks.bench_*.run()`` yields, so the CSV on
+    stdout and the JSON on disk can never disagree.
+    """
+    from repro.obs import env_fingerprint
+    payload = {
+        "schema": SCHEMA_VERSION,
+        "bench": name,
+        "created_utc": datetime.datetime.now(datetime.timezone.utc)
+                       .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "env": env_fingerprint(),
+        "results": [{"name": n, "us_per_call": float(us), "derived": str(d)}
+                    for n, us, d in rows],
+    }
+    path = bench_path(name, out_dir)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    errs = validate(payload)
+    if errs:
+        raise ValueError(f"{path}: {'; '.join(errs)}")
+    return payload
+
+
+def validate(payload: dict) -> list[str]:
+    """Schema errors for one trajectory file ([] = valid)."""
+    errs = []
+    if not isinstance(payload, dict):
+        return ["not an object"]
+    if payload.get("schema") != SCHEMA_VERSION:
+        errs.append(f"schema != {SCHEMA_VERSION}")
+    for field, typ in (("bench", str), ("created_utc", str), ("env", dict),
+                      ("results", list)):
+        if not isinstance(payload.get(field), typ):
+            errs.append(f"missing/invalid {field!r}")
+    for i, r in enumerate(payload.get("results") or []):
+        if not isinstance(r, dict):
+            errs.append(f"results[{i}]: not an object")
+            continue
+        if not isinstance(r.get("name"), str):
+            errs.append(f"results[{i}]: missing 'name'")
+        if not isinstance(r.get("us_per_call"), (int, float)):
+            errs.append(f"results[{i}]: missing 'us_per_call'")
+    return errs
+
+
+def compare(old: dict, new: dict) -> list[tuple[str, float, float, float]]:
+    """(name, old_us, new_us, new/old ratio) for benches present in both."""
+    old_by = {r["name"]: r["us_per_call"] for r in old["results"]}
+    out = []
+    for r in new["results"]:
+        if r["name"] in old_by and old_by[r["name"]] > 0:
+            o = old_by[r["name"]]
+            out.append((r["name"], o, r["us_per_call"],
+                        r["us_per_call"] / o))
+    return out

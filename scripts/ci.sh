@@ -2,6 +2,8 @@
 # CI entry. Usage: scripts/ci.sh [tier1|tier2|all]   (from the repo root)
 #
 #   tier1 — the full test suite + one 3-round simulate smoke per policy
+#           + an instrumented observability smoke (JSONL schema-gated)
+#           + the kernels perf-trajectory family (BENCH_*.json artifact)
 #   tier2 — sketch-invariant property tests (hypothesis) + simtime tests
 #           + a 20-event event-clock smoke (5 rounds x 4 clients)
 set -euo pipefail
@@ -25,6 +27,18 @@ if [[ "$TIER" == "tier1" || "$TIER" == "all" ]]; then
     for policy in flat tree async; do
         python -m repro.launch.simulate --aggregate "$policy" --rounds 3
     done
+
+    echo "== observability smoke (instrumented event-clock run, schema-gated)"
+    OBS_DIR="$(mktemp -d)"
+    python -m repro.launch.simulate --clock event --aggregate async \
+        --rounds 3 --metrics "$OBS_DIR/run.jsonl" --trace
+    python -m repro.obs "$OBS_DIR/run.jsonl"
+    python scripts/report_run.py "$OBS_DIR/run.jsonl" > /dev/null
+    rm -rf "$OBS_DIR"
+
+    echo "== perf trajectory (kernels family -> bench-out/BENCH_*.json)"
+    mkdir -p bench-out
+    python -m benchmarks.run --json --only kernels --out-dir bench-out
 fi
 
 if [[ "$TIER" == "tier2" || "$TIER" == "all" ]]; then

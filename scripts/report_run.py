@@ -1,0 +1,159 @@
+"""Render a telemetry JSONL stream into a human run summary.
+
+    PYTHONPATH=src python scripts/report_run.py run.jsonl
+
+Sections: run fingerprint, per-round table (loss, cohort fates, bytes,
+Table-1-style compression ratio, virtual time), sketch health, staleness
+and idle-time quantiles, counter totals, and a span "flame" summary
+(by name, indented by nesting depth, sorted by total time).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro import obs  # noqa: E402  (stdlib-only import, no jax)
+
+
+def _fmt_bytes(n) -> str:
+    if n is None:
+        return "-"
+    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if abs(n) >= div:
+            return f"{n / div:.2f}{unit}"
+    return f"{n}B"
+
+
+def _fmt(v, spec=".3f") -> str:
+    return "-" if v is None else format(v, spec)
+
+
+def report(events: list[dict], out=sys.stdout) -> None:
+    meta = next((e for e in events if e["type"] == "meta"), None)
+    rounds = [e for e in events if e["type"] == "round"]
+    train_rounds = [e for e in events if e["type"] == "train_round"]
+    health = [e for e in events if e["type"] == "sketch_health"]
+    spans = [e for e in events if e["type"] == "span"]
+    metrics = next((e for e in reversed(events) if e["type"] == "metrics"),
+                   None)
+
+    if meta:
+        env = meta.get("env", {})
+        run = {k: v for k, v in meta.items()
+               if k not in ("type", "t", "env", "argv")}
+        print(f"run: {run}", file=out)
+        print(f"env: jax={env.get('jax')} backend={env.get('backend')} "
+              f"device={env.get('device')} python={env.get('python')}",
+              file=out)
+
+    if rounds:
+        is_event = any(r.get("t_virtual") is not None for r in rounds)
+        head = (f"{'rnd':>4} {'loss':>8} {'fresh':>5} {'late':>4} "
+                f"{'drop':>4} {'upload':>9} {'up_x':>8}")
+        if is_event:
+            head += f" {'t_virt':>9} {'queue':>5}"
+        print(f"\nper-round ({len(rounds)} rounds):", file=out)
+        print(head, file=out)
+        for r in rounds:
+            line = (f"{r['round']:>4} {_fmt(r['loss'], '8.4f'):>8} "
+                    f"{r['n_fresh']:>5} {r['n_late']:>4} "
+                    f"{r['n_dropped']:>4} "
+                    f"{_fmt_bytes(r['upload_bytes']):>9} "
+                    f"{r['upload_compression_x']:>8.1f}")
+            if is_event:
+                line += (f" {_fmt(r.get('t_virtual'), '9.1f'):>9} "
+                         f"{r.get('queue_depth', '-'):>5}")
+            print(line, file=out)
+        n = len(rounds)
+        up = sum(r["upload_bytes"] for r in rounds)
+        down = sum(r["download_bytes"] for r in rounds)
+        dense = sum(r["dense_equiv_upload_bytes"]
+                    + r["dense_equiv_download_bytes"] for r in rounds)
+        print(f"\ntraffic: up={_fmt_bytes(up)} down={_fmt_bytes(down)} "
+              f"({_fmt_bytes(up / n)}/round up)  "
+              f"overall compression {dense / max(up + down, 1):.1f}x "
+              f"(dense-equivalent {_fmt_bytes(dense)})", file=out)
+
+    if train_rounds:
+        print(f"\ntrain rounds ({len(train_rounds)}):", file=out)
+        for r in train_rounds:
+            print(f"  round {r['round']:>4}  loss {r['loss']:.4f}  "
+                  f"step {r['step_seconds']:.2f}s", file=out)
+
+    if health:
+        print("\nsketch health:", file=out)
+        print(f"{'rnd':>4} {'|S_e|':>10} {'|S_u|':>10} {'|table|':>10} "
+              f"{'rec_err':>8} {'hh_overlap':>10}", file=out)
+        for h in health:
+            print(f"{h['round']:>4} {h['error_sketch_norm']:>10.4f} "
+                  f"{h['momentum_sketch_norm']:>10.4f} "
+                  f"{h['agg_table_norm']:>10.4f} "
+                  f"{_fmt(h['recovery_rel_err'], '8.4f'):>8} "
+                  f"{_fmt(h['heavy_hitter_overlap'], '10.3f'):>10}",
+                  file=out)
+
+    if metrics:
+        hists = metrics.get("histograms", {})
+        shown = [(name, h) for name, h in sorted(hists.items())
+                 if h.get("count")]
+        if shown:
+            print("\ndistributions (histogram quantile estimates):",
+                  file=out)
+            for name, h in shown:
+                print(f"  {name:<28} n={h['count']:<6} "
+                      f"p50={obs.quantile_from_snapshot(h, .5):.3g} "
+                      f"p90={obs.quantile_from_snapshot(h, .9):.3g} "
+                      f"p99={obs.quantile_from_snapshot(h, .99):.3g} "
+                      f"max={h['max']:.3g}", file=out)
+        counters = metrics.get("counters", {})
+        if counters:
+            print("\ncounters:", file=out)
+            for k, v in sorted(counters.items()):
+                suffix = (f" ({_fmt_bytes(v)})" if k.endswith("bytes")
+                          else "")
+                print(f"  {k:<32} {v}{suffix}", file=out)
+
+    if spans:
+        agg: dict[str, dict] = {}
+        for s in spans:
+            a = agg.setdefault(s["name"], {"n": 0, "total": 0.0,
+                                           "max": 0.0,
+                                           "depth": s["depth"]})
+            a["n"] += 1
+            a["total"] += s["dur_s"]
+            a["max"] = max(a["max"], s["dur_s"])
+            a["depth"] = min(a["depth"], s["depth"])
+        print(f"\nspans ({len(spans)} total):", file=out)
+        print(f"{'name':<42} {'n':>5} {'total_s':>9} {'mean_ms':>9} "
+              f"{'max_ms':>9}", file=out)
+        for name, a in sorted(agg.items(),
+                              key=lambda kv: (kv[1]['depth'],
+                                              -kv[1]['total'])):
+            label = "  " * a["depth"] + name
+            print(f"{label:<42} {a['n']:>5} {a['total']:>9.3f} "
+                  f"{a['total'] / a['n'] * 1e3:>9.2f} "
+                  f"{a['max'] * 1e3:>9.2f}", file=out)
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: python scripts/report_run.py RUN.jsonl [...]",
+              file=sys.stderr)
+        return 2
+    for path in argv:
+        errs = obs.validate_jsonl(path)
+        if errs:
+            for e in errs:
+                print(f"{path}: {e}", file=sys.stderr)
+            return 1
+        print(f"== {path}")
+        report(obs.parse_jsonl(path))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -46,6 +46,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import fetchsgd as F
 
 
@@ -136,12 +137,29 @@ class Aggregator:
 
     name = "base"
 
-    def __init__(self, cfg: F.FetchSGDConfig):
+    def __init__(self, cfg: F.FetchSGDConfig, telemetry=None):
         self.cfg = cfg
         self.table_bytes = F.upload_bytes(cfg)
+        self.tele = telemetry if telemetry is not None else obs.NOOP
 
     def _zeros(self) -> jax.Array:
         return jnp.zeros((self.cfg.rows, self.cfg.cols), jnp.float32)
+
+    def _observe(self, stats: "AggregationStats") -> None:
+        """Record one merge's stats (no-op unless telemetry is live)."""
+        tele = self.tele
+        if not tele.enabled:
+            return
+        tele.counter("agg.merges").inc()
+        tele.counter("agg.tables_merged").inc(stats.n_fresh + stats.n_late)
+        tele.counter("agg.bytes_on_wire").inc(stats.upload_bytes)
+        for lv in stats.levels:
+            tele.counter(f"agg.level{lv.level}.bytes").inc(lv.bytes_on_wire)
+            tele.counter(f"agg.level{lv.level}.messages").inc(lv.n_messages)
+        tele.gauge("agg.root_ingress_tables").set(stats.root_ingress_tables)
+        if stats.critical_path_s:
+            tele.histogram("agg.critical_path_s").observe(
+                stats.critical_path_s)
 
     def aggregate(self, tables: Sequence[jax.Array], *,
                   weights: Sequence[float] | None = None,
@@ -176,6 +194,7 @@ class FlatAggregator(Aggregator):
             policy=self.name, n_fresh=len(tables), n_late=0,
             total_weight=total_w,
             levels=_leaf_level(len(tables), self.table_bytes, bandwidths))
+        self._observe(stats)
         return table, stats
 
 
@@ -191,8 +210,8 @@ class TreeAggregator(Aggregator):
     name = "tree"
 
     def __init__(self, cfg: F.FetchSGDConfig, fanout: int = 4,
-                 link_bandwidth: float | None = None):
-        super().__init__(cfg)
+                 link_bandwidth: float | None = None, telemetry=None):
+        super().__init__(cfg, telemetry=telemetry)
         if fanout < 2:
             raise ValueError(f"fanout must be >= 2, got {fanout}")
         if link_bandwidth is not None and link_bandwidth <= 0:
@@ -217,6 +236,7 @@ class TreeAggregator(Aggregator):
             levels=tree_levels(len(tables), self.fanout, self.table_bytes,
                                leaf_bandwidths=bandwidths,
                                link_bandwidth=self.link_bandwidth))
+        self._observe(stats)
         return table, stats
 
 
@@ -247,8 +267,8 @@ class AsyncBufferedAggregator(Aggregator):
     def __init__(self, cfg: F.FetchSGDConfig, discount: float = 0.9,
                  max_staleness: int = 8,
                  staleness_lambda: float | None = None,
-                 max_age: float | None = None):
-        super().__init__(cfg)
+                 max_age: float | None = None, telemetry=None):
+        super().__init__(cfg, telemetry=telemetry)
         if not 0.0 < discount <= 1.0:
             raise ValueError(f"discount must be in (0, 1], got {discount}")
         if staleness_lambda is not None and staleness_lambda < 0:
@@ -310,6 +330,7 @@ class AsyncBufferedAggregator(Aggregator):
         clock's drop threshold are dropped on the floor — their gradient
         direction is too old to help.
         """
+        tele = self.tele
         acc, total_w, n, max_s = self._zeros(), 0.0, 0, 0
         keep = []
         for e in self._buffer:
@@ -318,13 +339,20 @@ class AsyncBufferedAggregator(Aggregator):
                 continue
             s = round_idx - e["produced"]
             if self._too_stale(s):
+                if tele.enabled:
+                    tele.counter("agg.async.dropped_stale").inc()
                 continue
             w = e["weight"] * self._discount_for(s)
             acc = acc + w * e["table"]
             total_w += w
             n += 1
             max_s = max(max_s, s)
+            if tele.enabled:
+                tele.histogram("agg.async.staleness_age").observe(s)
         self._buffer = keep
+        if tele.enabled:
+            tele.counter("agg.async.late_merged").inc(n)
+            tele.gauge("agg.async.buffer_depth").set(len(self._buffer))
         return acc, total_w, n, max_s
 
     def aggregate(self, tables, *, weights=None, round_idx=0,
@@ -342,6 +370,7 @@ class AsyncBufferedAggregator(Aggregator):
             policy=self.name, n_fresh=len(tables), n_late=n_late,
             total_weight=total_w, max_staleness=max_s,
             levels=_leaf_level(n, self.table_bytes, bandwidths))
+        self._observe(stats)
         return table, stats
 
 
@@ -349,17 +378,19 @@ def make_aggregator(policy: str, cfg: F.FetchSGDConfig, *, fanout: int = 4,
                     discount: float = 0.9, max_staleness: int = 8,
                     staleness_lambda: float | None = None,
                     max_age: float | None = None,
-                    link_bandwidth: float | None = None) -> Aggregator:
+                    link_bandwidth: float | None = None,
+                    telemetry=None) -> Aggregator:
     if policy == "flat":
-        return FlatAggregator(cfg)
+        return FlatAggregator(cfg, telemetry=telemetry)
     if policy == "tree":
         return TreeAggregator(cfg, fanout=fanout,
-                              link_bandwidth=link_bandwidth)
+                              link_bandwidth=link_bandwidth,
+                              telemetry=telemetry)
     if policy == "async":
         return AsyncBufferedAggregator(cfg, discount=discount,
                                        max_staleness=max_staleness,
                                        staleness_lambda=staleness_lambda,
-                                       max_age=max_age)
+                                       max_age=max_age, telemetry=telemetry)
     raise ValueError(f"unknown aggregation policy {policy!r}")
 
 

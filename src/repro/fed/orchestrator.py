@@ -34,12 +34,14 @@ Two clocks drive the loop (``FederationConfig.clock``):
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import compression, fetchsgd as F
 from repro.core import layout as layout_lib
 from repro.data import federated
@@ -146,8 +148,16 @@ class Orchestrator:
     def __init__(self, model_cfg, fs_cfg: F.FetchSGDConfig,
                  fed_cfg: FederationConfig, dataset, *,
                  params=None, lr_fn: Callable | None = None,
-                 peak_lr: float = 0.2, grad_fn: Callable | None = None):
+                 peak_lr: float = 0.2, grad_fn: Callable | None = None,
+                 telemetry=None, health_every: int = 1):
         self.model_cfg = model_cfg
+        # Observability is read-only: it touches no RNG and mutates no run
+        # state, so an instrumented run's RoundRecord stream is
+        # byte-identical to an uninstrumented one (pinned in test_obs.py).
+        self.tele = telemetry if telemetry is not None else obs.NOOP
+        self.health_every = health_every
+        self._wall0: float | None = None   # first-round wall clock (event
+                                           # clock's virtual/wall ratio)
         self.fs_cfg = fs_cfg
         self.fed_cfg = fed_cfg
         self.dataset = dataset
@@ -176,7 +186,8 @@ class Orchestrator:
                               if self.is_event else None),
             max_age=self.sim_cfg.max_age if self.is_event else None,
             link_bandwidth=(self.sim_cfg.link_bandwidth
-                            if self.is_event else None))
+                            if self.is_event else None),
+            telemetry=self.tele)
         self.meter = compression.TrafficMeter(d=self.layout.total)
 
         lay, cfg = self.layout, fs_cfg
@@ -234,69 +245,194 @@ class Orchestrator:
         return 1.0
 
     def _record_traffic(self, upload_bytes: int, n_participating: int
-                        ) -> None:
-        # paper accounting (compression.fetchsgd_round): k values at 4 bytes
-        # each per participating client — matching the other simulate methods
+                        ) -> dict:
+        """Charge this round's bytes and return self-describing accounting.
+
+        Paper accounting (``compression.fetchsgd_round``, Sec. 5): the
+        download is k values at 4 bytes each per participating client —
+        matching the other simulate methods.  The *dense-equivalent*
+        fields are what uncompressed SGD would have moved for the same
+        participation (d float32 values each way per client), so the
+        per-round Table-1-style compression ratio is carried alongside the
+        raw bytes instead of living only in this comment.
+        """
         per_client_down = compression.fetchsgd_round(
             self.fs_cfg.rows, self.fs_cfg.cols, self.fs_cfg.k).download
+        download = per_client_down * n_participating
         self.meter.record(compression.RoundTraffic(
-            upload=upload_bytes,
-            download=per_client_down * n_participating), clients=1)
+            upload=upload_bytes, download=download), clients=1)
+        dense_each = self.layout.total * 4 * n_participating
+        return {
+            "upload_bytes": int(upload_bytes),
+            "download_bytes": int(download),
+            "dense_equiv_upload_bytes": int(dense_each),
+            "dense_equiv_download_bytes": int(dense_each),
+            "upload_compression_x": dense_each / max(upload_bytes, 1),
+            "total_compression_x": (2 * dense_each
+                                    / max(upload_bytes + download, 1)),
+        }
+
+    # -- telemetry (read-only; no-ops when ``self.tele`` is obs.NOOP) -------
+
+    def _emit_round(self, rec: RoundRecord, stats, traffic: dict) -> None:
+        tele = self.tele
+        if not tele.enabled:
+            return
+        ev = dict(round=rec.round_idx, loss=rec.loss,
+                  cohort_size=len(rec.cohort), n_fresh=rec.n_fresh,
+                  n_late=rec.n_late, n_dropped=rec.n_dropped,
+                  n_straggling=rec.n_straggling, policy=stats.policy,
+                  total_weight=stats.total_weight,
+                  root_ingress_tables=stats.root_ingress_tables, **traffic)
+        tele.counter("fed.rounds").inc()
+        tele.counter("fed.upload_bytes").inc(traffic["upload_bytes"])
+        tele.counter("fed.download_bytes").inc(traffic["download_bytes"])
+        tele.counter("fed.clients.dropped").inc(rec.n_dropped)
+        tele.counter("fed.clients.fresh").inc(rec.n_fresh)
+        tele.counter("fed.clients.late").inc(rec.n_late)
+        if rec.loss is not None:
+            tele.gauge("fed.loss").set(rec.loss)
+        tele.gauge("fed.compression.upload_x").set(
+            traffic["upload_compression_x"])
+        tele.histogram("fed.cohort_size").observe(len(rec.cohort))
+        if self.is_event:
+            ev.update(t_dispatch=rec.t_dispatch, t_virtual=rec.t_virtual,
+                      critical_path_s=rec.critical_path_s,
+                      queue_depth=len(self._queue))
+            tele.gauge("event.queue_depth").set(len(self._queue))
+            tele.gauge("event.t_virtual").set(rec.t_virtual)
+            wall = time.perf_counter() - self._wall0
+            if wall > 0 and rec.t_virtual is not None:
+                ratio = rec.t_virtual / wall
+                ev["virtual_wall_ratio"] = ratio
+                tele.gauge("event.virtual_wall_ratio").set(ratio)
+        if isinstance(self.aggregator, agg_lib.AsyncBufferedAggregator):
+            ev["buffer_depth"] = self.aggregator.pending()
+            tele.gauge("agg.async.buffer_depth").set(
+                self.aggregator.pending())
+        tele.emit("round", **ev)
+
+    def _sample_health(self, r: int) -> bool:
+        return (self.tele.enabled and self.health_every > 0
+                and r % self.health_every == 0)
+
+    def _emit_health(self, r: int, agg_table, fresh_tables, fresh_w,
+                     grad_acc) -> None:
+        """Sketch-space diagnostics for a sampled round.
+
+        The dense reference is the *fresh* cohort's weighted mean gradient
+        — late/buffered contributions' gradients are long gone — so the
+        recovery comparison rebuilds the matching fresh-only mean table
+        (exact by linearity) rather than using the merged ``agg_table``,
+        which may fold in stale entries.
+        """
+        from repro.obs import sketch_health as sh
+        ev: dict = sh.state_norms(self.opt_state, agg_table)
+        ev.update(round=r, recovery_rel_err=None, heavy_hitter_overlap=None)
+        if fresh_tables and grad_acc is not None:
+            total_w = sum(fresh_w)
+            htable = sum(w * t for t, w in
+                         zip(fresh_tables, fresh_w)) / total_w
+            dense = sh.flatten_dense(
+                jax.tree.map(lambda g: g / total_w, grad_acc), self.layout)
+            ev.update(sh.recovery_error(htable, dense, self.layout,
+                                        self.fs_cfg))
+            self.tele.gauge("sketch.recovery_rel_err").set(
+                ev["recovery_rel_err"])
+            self.tele.gauge("sketch.heavy_hitter_overlap").set(
+                ev["heavy_hitter_overlap"])
+        self.tele.gauge("sketch.error_norm").set(ev["error_sketch_norm"])
+        self.tele.gauge("sketch.momentum_norm").set(
+            ev["momentum_sketch_norm"])
+        self.tele.emit("sketch_health", **ev)
 
     def run_round(self, r: int) -> RoundRecord:
+        if self._wall0 is None:
+            self._wall0 = time.perf_counter()
         if self.is_event:
             return self._run_event_round(r)
         fc = self.fed_cfg
-        clients = self._cohort(r)
-        rng = _round_rng(fc.seed, r, stream=1)
-        is_async = isinstance(self.aggregator, agg_lib.AsyncBufferedAggregator)
+        round_span = self.tele.span("fed.round", round=r)
+        with round_span:
+            clients = self._cohort(r)
+            rng = _round_rng(fc.seed, r, stream=1)
+            is_async = isinstance(self.aggregator,
+                                  agg_lib.AsyncBufferedAggregator)
+            sample_health = self._sample_health(r)
 
-        fresh, fresh_w, losses, n_dropped, n_straggling = [], [], [], 0, 0
-        for c in clients:
-            fate, delay = self._fate(rng)
-            if fate == "dropped":
-                n_dropped += 1
-                continue
-            batch = self._client_batch(int(c))
-            loss, grads = self.grad_fn(self.params, batch)
-            table = self._sketch(grads)
-            losses.append(float(loss))
-            w = self._client_weight(int(c), batch)
-            if fate == "late":
-                if is_async:
-                    self.aggregator.submit(table, produced_round=r,
-                                           arrival_round=r + delay, weight=w)
-                    n_straggling += 1
-                else:  # sync barrier: a late client is a lost client
-                    n_dropped += 1
-                continue
-            fresh.append(table)
-            fresh_w.append(w)
+            fresh, fresh_w, losses, n_dropped, n_straggling = [], [], [], 0, 0
+            grad_acc = None
+            with self.tele.span("fed.clients") as sp:
+                for c in clients:
+                    fate, delay = self._fate(rng)
+                    if fate == "dropped":
+                        n_dropped += 1
+                        continue
+                    batch = self._client_batch(int(c))
+                    loss, grads = self.grad_fn(self.params, batch)
+                    table = self._sketch(grads)
+                    losses.append(float(loss))
+                    w = self._client_weight(int(c), batch)
+                    if fate == "late":
+                        if is_async:
+                            self.aggregator.submit(
+                                table, produced_round=r,
+                                arrival_round=r + delay, weight=w)
+                            n_straggling += 1
+                        else:  # sync barrier: a late client is a lost client
+                            n_dropped += 1
+                        continue
+                    fresh.append(table)
+                    fresh_w.append(w)
+                    if sample_health:
+                        wg = jax.tree.map(lambda g: w * g, grads)
+                        grad_acc = (wg if grad_acc is None else
+                                    jax.tree.map(jnp.add, grad_acc, wg))
+                sp.sync(fresh)
 
-        table, stats = self.aggregator.aggregate(fresh, weights=fresh_w,
-                                                 round_idx=r)
-        if stats.total_weight > 0:
-            delta, self.opt_state = self._server(table, self.opt_state,
-                                                 self.lr_fn(r))
-            self.params = self._apply(self.params, delta)
-        self._record_traffic(stats.upload_bytes, len(fresh) + n_straggling)
-        return RoundRecord(
-            round_idx=r, cohort=[int(c) for c in clients],
-            loss=(sum(losses) / len(losses)) if losses else None,
-            n_fresh=stats.n_fresh, n_late=stats.n_late, n_dropped=n_dropped,
-            n_straggling=n_straggling, upload_bytes=stats.upload_bytes)
+            with self.tele.span("fed.aggregate") as sp:
+                table, stats = self.aggregator.aggregate(
+                    fresh, weights=fresh_w, round_idx=r)
+                sp.sync(table)
+            with self.tele.span("fed.server_update") as sp:
+                if stats.total_weight > 0:
+                    delta, self.opt_state = self._server(table,
+                                                         self.opt_state,
+                                                         self.lr_fn(r))
+                    self.params = self._apply(self.params, delta)
+                sp.sync(self.params)
+            traffic = self._record_traffic(stats.upload_bytes,
+                                           len(fresh) + n_straggling)
+            rec = RoundRecord(
+                round_idx=r, cohort=[int(c) for c in clients],
+                loss=(sum(losses) / len(losses)) if losses else None,
+                n_fresh=stats.n_fresh, n_late=stats.n_late,
+                n_dropped=n_dropped, n_straggling=n_straggling,
+                upload_bytes=stats.upload_bytes)
+            self._emit_round(rec, stats, traffic)
+            if sample_health:
+                self._emit_health(r, table, fresh, fresh_w, grad_acc)
+        return rec
 
     # -- event-driven clock (fed.simtime) -----------------------------------
 
-    def _dispatch_cohort(self, r: int) -> tuple[np.ndarray, int]:
+    def _dispatch_cohort(self, r: int) -> tuple[np.ndarray, int, tuple]:
         """Sample cohort r at the current virtual time, compute each
         client's sketch against the *current* params (the snapshot it
-        downloads at dispatch), and enqueue its timed upload event."""
+        downloads at dispatch), and enqueue its timed upload event.
+
+        The third return value is the health sample ``(tables, weights,
+        grad_acc)`` for this dispatch cohort — ``(None, None, None)``
+        unless telemetry sampled this round."""
         fc = self.fed_cfg
+        tele = self.tele
         now = self._now
         clients = self._cohort(r)
         rng = _round_rng(fc.seed, r, stream=1)
         n_dropped = 0
+        sample_health = self._sample_health(r)
+        h_tables, h_weights, grad_acc = ([], [], None) if sample_health else \
+            (None, None, None)
         for slot, c in enumerate(clients):
             fate, delay = self._fate(rng)
             if fate == "dropped":
@@ -310,11 +446,25 @@ class Orchestrator:
             # this round the client computes (1 + delay)x slower
             finish = prof.finish_time(now, self.aggregator.table_bytes,
                                       compute_scale=1.0 + delay)
+            w = self._client_weight(int(c), batch)
+            if tele.enabled:
+                # availability idle: how long the client sat outside its
+                # window before it could even start computing
+                idle = prof.next_available(now) - now
+                tele.histogram("event.client_idle_s").observe(idle)
+                tele.counter("event.client_idle_s_total").inc(idle)
+                tele.histogram("event.upload_s").observe(
+                    prof.upload_seconds(self.aggregator.table_bytes))
+            if sample_health:
+                h_tables.append(table)
+                h_weights.append(w)
+                wg = jax.tree.map(lambda g: w * g, grads)
+                grad_acc = (wg if grad_acc is None else
+                            jax.tree.map(jnp.add, grad_acc, wg))
             self._queue.push(simtime_lib.Event(
                 time=finish, round_produced=r, slot=slot, client=int(c),
-                produced=now, weight=self._client_weight(int(c), batch),
-                loss=float(loss), table=table))
-        return clients, n_dropped
+                produced=now, weight=w, loss=float(loss), table=table))
+        return clients, n_dropped, (h_tables, h_weights, grad_acc)
 
     def _run_event_round(self, r: int) -> RoundRecord:
         """One server update of the event loop.
@@ -334,43 +484,65 @@ class Orchestrator:
         merge-level accounting exactly.
         """
         fc = self.fed_cfg
-        t_dispatch = self._now
-        clients, n_dropped = self._dispatch_cohort(r)
-        is_async = isinstance(self.aggregator, agg_lib.AsyncBufferedAggregator)
-        n_pop = (min(self.sim_cfg.quorum or fc.clients_per_round,
-                     len(self._queue))
-                 if is_async else len(self._queue))
-        arrivals = [self._queue.pop() for _ in range(n_pop)]
-        if arrivals:
-            self._now = arrivals[-1].time    # heap order: the max popped
-        losses = [e.loss for e in arrivals]
-        bandwidths = [self.het.profile(e.client).bandwidth for e in arrivals]
-        if is_async:
-            for e in arrivals:
-                self.aggregator.submit(e.table, produced_round=e.produced,
-                                       arrival_round=e.time, weight=e.weight)
-            table, stats = self.aggregator.aggregate(
-                [], round_idx=self._now, bandwidths=bandwidths)
-        else:
-            table, stats = self.aggregator.aggregate(
-                [e.table for e in arrivals],
-                weights=[e.weight for e in arrivals],
-                round_idx=r, bandwidths=bandwidths)
-        if stats.total_weight > 0:
-            delta, self.opt_state = self._server(table, self.opt_state,
-                                                 self.lr_fn(r))
-            self.params = self._apply(self.params, delta)
-        n_sent = len(clients) - n_dropped
-        internal = sum(lv.bytes_on_wire for lv in stats.levels[1:])
-        upload = n_sent * self.aggregator.table_bytes + internal
-        self._record_traffic(upload, len(arrivals))
-        return RoundRecord(
-            round_idx=r, cohort=[int(c) for c in clients],
-            loss=(sum(losses) / len(losses)) if losses else None,
-            n_fresh=stats.n_fresh, n_late=stats.n_late, n_dropped=n_dropped,
-            n_straggling=len(self._queue), upload_bytes=upload,
-            t_dispatch=t_dispatch, t_virtual=self._now,
-            critical_path_s=stats.critical_path_s)
+        tele = self.tele
+        round_span = tele.span("fed.round", round=r, clock="event")
+        with round_span:
+            t_dispatch = self._now
+            with tele.span("fed.dispatch"):
+                # per-client float(loss) inside the dispatch already syncs
+                clients, n_dropped, health = self._dispatch_cohort(r)
+            if tele.enabled:
+                tele.gauge("event.queue_depth").set(len(self._queue))
+                tele.histogram("event.queue_depth").observe(len(self._queue))
+            is_async = isinstance(self.aggregator,
+                                  agg_lib.AsyncBufferedAggregator)
+            n_pop = (min(self.sim_cfg.quorum or fc.clients_per_round,
+                         len(self._queue))
+                     if is_async else len(self._queue))
+            arrivals = [self._queue.pop() for _ in range(n_pop)]
+            if arrivals:
+                self._now = arrivals[-1].time    # heap order: the max popped
+            losses = [e.loss for e in arrivals]
+            bandwidths = [self.het.profile(e.client).bandwidth
+                          for e in arrivals]
+            with tele.span("fed.aggregate") as sp:
+                if is_async:
+                    for e in arrivals:
+                        self.aggregator.submit(e.table,
+                                               produced_round=e.produced,
+                                               arrival_round=e.time,
+                                               weight=e.weight)
+                    table, stats = self.aggregator.aggregate(
+                        [], round_idx=self._now, bandwidths=bandwidths)
+                else:
+                    table, stats = self.aggregator.aggregate(
+                        [e.table for e in arrivals],
+                        weights=[e.weight for e in arrivals],
+                        round_idx=r, bandwidths=bandwidths)
+                sp.sync(table)
+            with tele.span("fed.server_update") as sp:
+                if stats.total_weight > 0:
+                    delta, self.opt_state = self._server(table,
+                                                         self.opt_state,
+                                                         self.lr_fn(r))
+                    self.params = self._apply(self.params, delta)
+                sp.sync(self.params)
+            n_sent = len(clients) - n_dropped
+            internal = sum(lv.bytes_on_wire for lv in stats.levels[1:])
+            upload = n_sent * self.aggregator.table_bytes + internal
+            traffic = self._record_traffic(upload, len(arrivals))
+            rec = RoundRecord(
+                round_idx=r, cohort=[int(c) for c in clients],
+                loss=(sum(losses) / len(losses)) if losses else None,
+                n_fresh=stats.n_fresh, n_late=stats.n_late,
+                n_dropped=n_dropped, n_straggling=len(self._queue),
+                upload_bytes=upload, t_dispatch=t_dispatch,
+                t_virtual=self._now, critical_path_s=stats.critical_path_s)
+            self._emit_round(rec, stats, traffic)
+            h_tables, h_weights, grad_acc = health
+            if h_tables is not None:
+                self._emit_health(r, table, h_tables, h_weights, grad_acc)
+        return rec
 
     # -- driver -------------------------------------------------------------
 
@@ -412,7 +584,9 @@ class Orchestrator:
 
 def run_federated(model_cfg, dataset, *, fs_cfg: F.FetchSGDConfig,
                   fed_cfg: FederationConfig, peak_lr: float = 0.2,
-                  params=None, progress=None) -> FedRunResult:
+                  params=None, progress=None,
+                  telemetry=None) -> FedRunResult:
     """One-call convenience wrapper around ``Orchestrator``."""
     return Orchestrator(model_cfg, fs_cfg, fed_cfg, dataset, params=params,
-                        peak_lr=peak_lr).run(progress=progress)
+                        peak_lr=peak_lr,
+                        telemetry=telemetry).run(progress=progress)

@@ -11,6 +11,12 @@
 
 The two paths are bit-compatible w.r.t. hash identity (same
 ``repro.core.hashing`` family), so sketches built by either can be merged.
+
+Telemetry: ``set_telemetry(tele)`` arms wall-clock spans around *eager*
+kernel dispatches (``kernel.encode[pallas]`` etc., device-synced via
+``block_until_ready``).  Calls under a ``jit`` trace see tracer inputs
+and are never timed — a span there would measure tracing, not compute —
+so instrumentation cannot perturb compiled programs.
 """
 
 from __future__ import annotations
@@ -18,12 +24,29 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from . import count_sketch as pallas_cs
 from . import ref
 
 # Above this table size the (rows, C_o, 128) accumulator no longer fits VMEM
 # comfortably alongside the one-hot tiles; fall back to XLA scatter.
 _PALLAS_MAX_TABLE_BYTES = 8 * 1024 * 1024
+
+_TELE = obs.NOOP
+
+
+def set_telemetry(tele) -> None:
+    """Route kernel-dispatch spans to ``tele`` (None resets to no-op)."""
+    global _TELE
+    _TELE = tele if tele is not None else obs.NOOP
+
+
+def _span(name: str, operand):
+    """A live span only for eager (non-traced) dispatches."""
+    if _TELE.trace_enabled and not isinstance(operand, jax.core.Tracer):
+        return _TELE.span(name)
+    return obs.NULL_SPAN
 
 
 def _pallas_ok(rows: int, cols: int) -> bool:
@@ -39,10 +62,12 @@ def sketch_encode(values: jax.Array, offset: int, rows: int, cols: int,
     """(rows, cols) sketch contribution of a chunk; impl in {auto,pallas,xla}."""
     if impl == "auto":
         impl = "pallas" if _pallas_ok(rows, cols) else "xla"
-    if impl == "pallas":
-        return pallas_cs.sketch_encode(values, offset, rows, cols, key,
-                                       interpret=_interpret())
-    return ref.sketch_encode(values, offset, rows, cols, key)
+    mode = "interpret" if (impl == "pallas" and _interpret()) else "compiled"
+    with _span(f"kernel.encode[{impl}:{mode}]", values) as sp:
+        if impl == "pallas":
+            return sp.sync(pallas_cs.sketch_encode(
+                values, offset, rows, cols, key, interpret=_interpret()))
+        return sp.sync(ref.sketch_encode(values, offset, rows, cols, key))
 
 
 def sketch_estimate(table: jax.Array, offset: int, n: int, key: int = 0, *,
@@ -50,10 +75,12 @@ def sketch_estimate(table: jax.Array, offset: int, n: int, key: int = 0, *,
     rows, cols = table.shape
     if impl == "auto":
         impl = "pallas" if _pallas_ok(rows, cols) else "xla"
-    if impl == "pallas":
-        return pallas_cs.sketch_estimate(table, offset, n, key,
-                                         interpret=_interpret())
-    return ref.sketch_estimate(table, offset, n, key)
+    mode = "interpret" if (impl == "pallas" and _interpret()) else "compiled"
+    with _span(f"kernel.estimate[{impl}:{mode}]", table) as sp:
+        if impl == "pallas":
+            return sp.sync(pallas_cs.sketch_estimate(
+                table, offset, n, key, interpret=_interpret()))
+        return sp.sync(ref.sketch_estimate(table, offset, n, key))
 
 
 def sketch_encode_words(values: jax.Array, off_lo: jax.Array,
@@ -61,11 +88,13 @@ def sketch_encode_words(values: jax.Array, off_lo: jax.Array,
                         key: int = 0, *, impl: str = "auto") -> jax.Array:
     """Encode with a traced 64-bit base offset (EP shards, scanned chunks)."""
     from repro.core import count_sketch as core_cs
-    import jax.numpy as jnp
     if impl == "auto":
         impl = "pallas" if _pallas_ok(rows, cols) else "xla"
-    if impl == "pallas":
-        off = jnp.stack([off_lo, off_hi]).astype(jnp.uint32)
-        return pallas_cs.sketch_encode_words(values, off, rows, cols, key,
-                                             interpret=_interpret())
-    return core_cs.sketch_chunk_dyn(values, off_lo, off_hi, rows, cols, key)
+    mode = "interpret" if (impl == "pallas" and _interpret()) else "compiled"
+    with _span(f"kernel.encode_words[{impl}:{mode}]", values) as sp:
+        if impl == "pallas":
+            off = jnp.stack([off_lo, off_hi]).astype(jnp.uint32)
+            return sp.sync(pallas_cs.sketch_encode_words(
+                values, off, rows, cols, key, interpret=_interpret()))
+        return sp.sync(core_cs.sketch_chunk_dyn(values, off_lo, off_hi,
+                                                rows, cols, key))

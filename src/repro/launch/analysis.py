@@ -123,6 +123,8 @@ def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
             n_devices: int, model_flops: float,
             step_flops: float) -> Roofline:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)

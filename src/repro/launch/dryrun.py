@@ -30,7 +30,7 @@ import traceback
 
 import jax
 
-from repro import configs
+from repro import configs, obs
 from repro.core import fetchsgd as F
 from repro.launch import analysis, mesh as mesh_lib, shapes, steps
 from repro.models import transformer
@@ -44,7 +44,8 @@ def default_fetchsgd_config() -> F.FetchSGDConfig:
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             aggregate: str = "sketch", sketch_mode: str = "gathered",
             donate: bool = False, fs_cfg=None, cfg_overrides=None,
-            verbose: bool = True):
+            verbose: bool = True, telemetry=None):
+    tele = telemetry if telemetry is not None else obs.NOOP
     shape = shapes.SHAPES[shape_name]
     cfg = shapes.adapt_config(configs.get_config(arch), shape)
     if cfg_overrides:
@@ -55,18 +56,21 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     fs_cfg = fs_cfg or default_fetchsgd_config()
 
     t0 = time.time()
-    if shape.kind == "train":
-        bundle = steps.make_train_step(cfg, shape, mesh, fs_cfg,
-                                       aggregate=aggregate,
-                                       sketch_mode=sketch_mode,
-                                       donate=donate)
-    elif shape.kind == "prefill":
-        bundle = steps.make_prefill_step(cfg, shape, mesh, donate=donate)
-    else:
-        bundle = steps.make_decode_step(cfg, shape, mesh, donate=donate)
+    with tele.span("dryrun.build_step", arch=arch, shape=shape_name):
+        if shape.kind == "train":
+            bundle = steps.make_train_step(cfg, shape, mesh, fs_cfg,
+                                           aggregate=aggregate,
+                                           sketch_mode=sketch_mode,
+                                           donate=donate)
+        elif shape.kind == "prefill":
+            bundle = steps.make_prefill_step(cfg, shape, mesh, donate=donate)
+        else:
+            bundle = steps.make_decode_step(cfg, shape, mesh, donate=donate)
     with mesh:
-        lowered = bundle.fn.lower(*bundle.inputs)
-        compiled = lowered.compile()
+        with tele.span("dryrun.lower", arch=arch, shape=shape_name):
+            lowered = bundle.fn.lower(*bundle.inputs)
+        with tele.span("dryrun.compile", arch=arch, shape=shape_name):
+            compiled = lowered.compile()
     dt = time.time() - t0
 
     n_params = sum(int(x.size) for x in jax.tree.leaves(bundle.inputs[0]))
@@ -79,6 +83,14 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                             mesh_name=mesh_name, n_devices=mesh.size,
                             model_flops=mf, step_flops=sf)
     ma = compiled.memory_analysis()
+    if tele.enabled:
+        tele.counter("dryrun.compiles").inc()
+        tele.histogram("dryrun.compile_seconds").observe(dt)
+        tele.emit("dryrun", arch=arch, shape=shape_name, mesh=mesh_name,
+                  compile_s=dt, flops=roof.flops, hbm_bytes=roof.hbm_bytes,
+                  coll_bytes=roof.coll_bytes,
+                  peak_mem_bytes=roof.peak_mem_bytes,
+                  bottleneck=roof.bottleneck)
     if verbose:
         print(f"== {arch} x {shape_name} x {mesh_name} "
               f"(aggregate={aggregate if shape.kind == 'train' else '-'}) "
@@ -112,7 +124,9 @@ def main() -> int:
     ap.add_argument("--sketch-mode", default="gathered",
                     choices=("gathered", "model_local"))
     ap.add_argument("--json", default=None, help="append results as JSON lines")
+    obs.add_cli_flags(ap)   # --metrics PATH.jsonl / --trace / --obs-summary
     args = ap.parse_args()
+    tele = obs.from_args(args, run="dryrun", aggregate=args.aggregate)
 
     combos = ([(args.arch, args.shape)] if not args.all else
               [(a, s) for a in configs.list_archs() if a != "gpt2s-federated"
@@ -136,7 +150,8 @@ def main() -> int:
         try:
             roof, dt, n_params = run_one(arch, shp, multi_pod=args.multi_pod,
                                          aggregate=args.aggregate,
-                                         sketch_mode=args.sketch_mode)
+                                         sketch_mode=args.sketch_mode,
+                                         telemetry=tele)
             results.append((roof, dt, n_params))
             if args.json:
                 with open(args.json, "a") as f:
@@ -162,6 +177,7 @@ def main() -> int:
             print(f"== {arch} x {shp}: FAILED")
             traceback.print_exc()
             failures.append((arch, shp))
+    tele.close()
     print(f"\n{len(results)} lowered+compiled, {len(failures)} failures")
     return 1 if failures else 0
 

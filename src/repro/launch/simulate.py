@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import fed
+from repro import fed, obs
 from repro.baselines import fedavg, local_topk, uncompressed
 from repro.core import compression, fetchsgd as F
 from repro.core import layout as layout_lib
@@ -75,7 +75,8 @@ def run_simulation(cfg, *, method: str = "fetchsgd", rounds: int = 30,
                    fa_cfg: fedavg.FedAvgConfig | None = None,
                    dataset=None, seed: int = 0,
                    eval_every: int = 1, aggregate: str = "flat",
-                   fed_cfg: fed.FederationConfig | None = None) -> SimResult:
+                   fed_cfg: fed.FederationConfig | None = None,
+                   telemetry=None, health_every: int = 1) -> SimResult:
     dataset = dataset or synthetic.ClassShardLM(
         vocab=cfg.vocab, seq_len=32, n_classes=8, n_clients=256,
         samples_per_client=4, seed=seed)
@@ -100,7 +101,8 @@ def run_simulation(cfg, *, method: str = "fetchsgd", rounds: int = 30,
             lr_fn = triangular(peak_lr, fed_cfg.rounds)   # aligned with it
         res = fed.Orchestrator(cfg, fs_cfg, fed_cfg, dataset,
                                params=params, lr_fn=lr_fn,
-                               grad_fn=gf).run()
+                               grad_fn=gf, telemetry=telemetry,
+                               health_every=health_every).run()
         extras["fs_cfg"] = fs_cfg
         extras["fed_records"] = res.records
         extras["pending_late"] = res.extras["pending_late"]
@@ -265,10 +267,20 @@ def main(argv=None):
                     help="event: availability window period (0 = always up)")
     ap.add_argument("--avail-duty-min", type=float, default=1.0)
     ap.add_argument("--avail-duty-max", type=float, default=1.0)
+    obs.add_cli_flags(ap)   # --metrics PATH.jsonl / --trace / --obs-summary
+    ap.add_argument("--health-every", type=int, default=1,
+                    help="emit sketch-health diagnostics every N rounds "
+                         "(0 = never; only active with --metrics)")
     args = ap.parse_args(argv)
 
     cfg = micro_cfg()
     dataset = micro_dataset(cfg, seed=args.seed)
+    telemetry = obs.from_args(args, run="simulate", method=args.method,
+                              aggregate=args.aggregate, clock=args.clock,
+                              seed=args.seed)
+    if telemetry.trace_enabled:
+        from repro.kernels import ops as kernel_ops
+        kernel_ops.set_telemetry(telemetry)
     simtime = None
     if args.clock == "event":
         simtime = fed.SimTimeConfig(
@@ -293,12 +305,18 @@ def main(argv=None):
         clock=args.clock, simtime=simtime, weight_by=args.weight_by,
         seed=args.seed, checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every)
-    res = run_simulation(cfg, method=args.method, rounds=args.rounds,
-                         clients_per_round=args.clients_per_round,
-                         peak_lr=args.peak_lr, dataset=dataset,
-                         seed=args.seed, aggregate=args.aggregate,
-                         fed_cfg=fed_cfg if args.method == "fetchsgd"
-                         else None)
+    try:
+        res = run_simulation(cfg, method=args.method, rounds=args.rounds,
+                             clients_per_round=args.clients_per_round,
+                             peak_lr=args.peak_lr, dataset=dataset,
+                             seed=args.seed, aggregate=args.aggregate,
+                             fed_cfg=fed_cfg if args.method == "fetchsgd"
+                             else None, telemetry=telemetry,
+                             health_every=args.health_every)
+    finally:
+        telemetry.close()
+    if args.metrics:
+        print(f"telemetry: {args.metrics}")
     print(f"method={args.method} aggregate={args.aggregate} "
           f"clock={args.clock}")
     if not res.losses:

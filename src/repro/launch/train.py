@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.core import fetchsgd as F
 from repro.data import synthetic
 from repro.fed import aggregator as fed_agg
@@ -65,7 +65,10 @@ def main():
     ap.add_argument("--compute-median", type=float, default=1.0)
     ap.add_argument("--bw-median", type=float, default=1e6)
     ap.add_argument("--bw-sigma", type=float, default=1.0)
+    obs.add_cli_flags(ap)   # --metrics PATH.jsonl / --trace / --obs-summary
     args = ap.parse_args()
+    tele = obs.from_args(args, run="train", arch=args.arch,
+                         aggregate=args.aggregate, clock=args.clock)
 
     if args.debug_mesh:
         parts = [int(p) for p in args.debug_mesh.split("x")]
@@ -136,10 +139,12 @@ def main():
                 # with an unapplied cohort
                 straggle = (straggle_rng.random() < args.straggle_prob
                             and r < args.rounds - 1)
-                params, opt, m = bundle.fn(
-                    params, opt, batch, jnp.float32(lr_fn(r)),
-                    jnp.float32(0.0 if straggle else 1.0), inject,
-                    jnp.float32(inject_w))
+                with tele.span("train.step", round=r) as sp:
+                    params, opt, m = bundle.fn(
+                        params, opt, batch, jnp.float32(lr_fn(r)),
+                        jnp.float32(0.0 if straggle else 1.0), inject,
+                        jnp.float32(inject_w))
+                    sp.sync(m)
                 if is_event:
                     prof = het.profile(r % 256)
                     arrive = prof.finish_time(
@@ -161,11 +166,21 @@ def main():
                 if is_event:
                     tag += f" t={now:.1f}s"
             else:
-                params, opt, m = bundle.fn(params, opt, batch,
-                                           jnp.float32(lr_fn(r)))
+                with tele.span("train.step", round=r) as sp:
+                    params, opt, m = bundle.fn(params, opt, batch,
+                                               jnp.float32(lr_fn(r)))
+                    sp.sync(m)
                 tag = ""
-            print(f"round {r}: loss {float(m['loss']):.4f} "
-                  f"({time.time()-t0:.1f}s){tag}")
+            dt = time.time() - t0
+            loss = float(m["loss"])
+            if tele.enabled:
+                tele.gauge("train.loss").set(loss)
+                tele.counter("train.rounds").inc()
+                tele.histogram("train.step_seconds").observe(dt)
+                tele.emit("train_round", round=r, loss=loss, step_seconds=dt)
+            print(f"round {r}: loss {loss:.4f} "
+                  f"({dt:.1f}s){tag}")
+    tele.close()
     assert np.isfinite(float(m["loss"]))
     print("done")
 

@@ -1,0 +1,34 @@
+"""Telemetry for the federation runtime: metrics, spans, sinks, schema.
+
+One import point for instrumented code::
+
+    from repro import obs
+
+    tele = obs.Telemetry([obs.JsonlSink("run.jsonl")], trace=True)
+    with tele.span("round", round=r) as sp:
+        tele.counter("bytes").inc(n)
+        out = sp.sync(jitted_fn(x))     # span blocks on device work
+    tele.close()                        # final metrics snapshot event
+
+Disabled is the default and must stay free: ``obs.NOOP`` satisfies the
+same API with shared stateless singletons, so ``telemetry=obs.NOOP``
+(the parameter default everywhere) adds only dead branches to the hot
+path.  The JSONL contract lives in ``repro.obs.schema`` (also a CLI:
+``python -m repro.obs.schema run.jsonl``); ``scripts/report_run.py``
+renders a stream into a human summary.
+"""
+
+from .metrics import (Counter, Gauge, Histogram,              # noqa: F401
+                      MetricsRegistry, default_buckets,
+                      quantile_from_snapshot)
+from .schema import (EVENT_SCHEMAS, validate_event,           # noqa: F401
+                     validate_events, validate_jsonl)
+from .sinks import (JsonlSink, MemorySink, NullSink, Sink,    # noqa: F401
+                    StdoutSummarySink, parse_jsonl)
+from .telemetry import (NOOP, NoopTelemetry, Telemetry,       # noqa: F401
+                        add_cli_flags, env_fingerprint, from_args)
+from .trace import NULL_SPAN, NullSpan, Span                  # noqa: F401
+
+# NOTE: ``repro.obs.sketch_health`` is imported lazily by its users (it
+# pulls in jax via repro.core); everything above is stdlib-only so the
+# schema CLI and report tooling stay instant.

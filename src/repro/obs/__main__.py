@@ -1,0 +1,11 @@
+"""``python -m repro.obs run.jsonl`` — schema-validate event streams.
+
+Equivalent to ``python -m repro.obs.schema`` but without runpy's
+already-imported warning (the package __init__ imports ``schema``).
+"""
+
+import sys
+
+from .schema import main
+
+sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,74 @@
+"""Sketch-space health diagnostics — the FetchSGD-specific telemetry.
+
+Off-the-shelf observability can time rounds and count bytes; it cannot
+tell you whether the *sketch* is still doing its job.  Three signals
+cover the failure modes of Algorithm 1:
+
+* ``error_sketch_norm`` — ||S_e||_F.  Error feedback accumulates what
+  top-k left behind; unbounded growth means k (or the learning rate) is
+  mis-sized and the un-extracted mass is swamping the table.
+* ``momentum_sketch_norm`` — ||S_u||_F, momentum-in-sketch magnitude.
+* ``recovery_rel_err`` / ``heavy_hitter_overlap`` — on a sampled round,
+  compare the server's aggregated table against the *dense* mean
+  gradient it is a sketch of: relative L2 error of the estimated top-k
+  values, and the fraction of estimated heavy hitters that really are in
+  the dense top-k.  This is the Count-Sketch guarantee (heavy hitters
+  recovered within +/- eps * ||g||) made observable per run — if the
+  overlap decays, the (rows x cols) table is too small for the model's
+  gradient density.
+
+The dense reference costs one flatten of the mean gradient, so the
+orchestrator only computes it when telemetry is enabled and the round is
+sampled (``health_every``).  Nothing here mutates run state.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layout as layout_lib
+from repro.core import topk as topk_lib
+
+
+def flatten_dense(grads, layout: layout_lib.ParamLayout) -> jnp.ndarray:
+    """Mean-gradient pytree -> the flat d-vector the hashes are defined on."""
+    views = layout_lib.leaf_views(grads, layout)
+    return jnp.concatenate([v.reshape(-1).astype(jnp.float32)
+                            for v in views])
+
+
+def state_norms(opt_state, agg_table) -> dict:
+    """Frobenius norms of the server's sketch-space state (cheap gauges)."""
+    return {
+        "error_sketch_norm": float(jnp.linalg.norm(opt_state.error_sketch)),
+        "momentum_sketch_norm": float(
+            jnp.linalg.norm(opt_state.momentum_sketch)),
+        "agg_table_norm": float(jnp.linalg.norm(agg_table)),
+    }
+
+
+def recovery_error(agg_table, dense_flat, layout: layout_lib.ParamLayout,
+                   cfg) -> dict:
+    """Top-k recovery quality of ``agg_table`` vs its dense reference.
+
+    ``dense_flat`` must be the same weighted mean the table is a sketch
+    of (the linearity invariant) — then ``est ~= dense_flat[ids]`` up to
+    Count-Sketch estimation noise, and the two numbers below measure
+    exactly that noise.
+    """
+    est = topk_lib.topk_from_sketch(agg_table, layout, cfg.k, cfg.hash_key)
+    offs = np.asarray([ch.offset for ch in layout.chunks], np.int64)
+    gidx = offs[np.asarray(est.chunk_id)] + np.asarray(est.local_idx,
+                                                       np.int64)
+    dense = np.asarray(dense_flat)
+    true_vals = dense[gidx]
+    est_vals = np.asarray(est.values)
+    denom = float(np.linalg.norm(true_vals))
+    rel_err = (float(np.linalg.norm(est_vals - true_vals)) / denom
+               if denom > 0 else 0.0)
+    k = est.k
+    true_top = np.argpartition(np.abs(dense), -k)[-k:]
+    overlap = len(np.intersect1d(gidx, true_top,
+                                 assume_unique=False)) / max(k, 1)
+    return {"recovery_rel_err": rel_err, "heavy_hitter_overlap": overlap}
