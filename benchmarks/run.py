@@ -19,8 +19,8 @@ import sys
 import traceback
 
 from . import (bench_aggregation_modes, bench_compression, bench_convergence,
-               bench_kernels, bench_simtime, bench_sketch_aggregation,
-               bench_true_topk, trajectory)
+               bench_kernels, bench_simscale, bench_simtime,
+               bench_sketch_aggregation, bench_true_topk, trajectory)
 
 MODULES = [
     ("table1", bench_compression),
@@ -30,6 +30,7 @@ MODULES = [
     ("sec3.2", bench_sketch_aggregation),
     ("fed-runtime", bench_aggregation_modes),
     ("simtime", bench_simtime),
+    ("simscale", bench_simscale),
 ]
 
 

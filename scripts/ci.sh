@@ -4,8 +4,9 @@
 #   tier1 — the full test suite + one 3-round simulate smoke per policy
 #           + an instrumented observability smoke (JSONL schema-gated)
 #           + the kernels perf-trajectory family (BENCH_*.json artifact)
-#   tier2 — sketch-invariant property tests (hypothesis) + simtime tests
-#           + a 20-event event-clock smoke (5 rounds x 4 clients)
+#   tier2 — sketch-invariant property tests (hypothesis) + simtime +
+#           population-equivalence tests + a 20-event event-clock smoke
+#           (5 rounds x 4 clients) + a 10^4-client vectorized smoke
 set -euo pipefail
 cd "$(dirname "$0")/.."
 TIER="${1:-all}"
@@ -36,19 +37,23 @@ if [[ "$TIER" == "tier1" || "$TIER" == "all" ]]; then
     python scripts/report_run.py "$OBS_DIR/run.jsonl" > /dev/null
     rm -rf "$OBS_DIR"
 
-    echo "== perf trajectory (kernels family -> bench-out/BENCH_*.json)"
+    echo "== perf trajectory (kernels + simscale -> bench-out/BENCH_*.json)"
     mkdir -p bench-out
     python -m benchmarks.run --json --only kernels --out-dir bench-out
+    python -m benchmarks.run --json --only simscale --out-dir bench-out
 fi
 
 if [[ "$TIER" == "tier2" || "$TIER" == "all" ]]; then
     echo "== tier-2: property tests + event-clock tests"
     python -m pytest -x -q tests/test_sketch_properties.py \
-        tests/test_simtime.py
+        tests/test_simtime.py tests/test_population.py
     echo "== 20-event simtime smoke (skewed bandwidth, async quorum)"
     python -m repro.launch.simulate --clock event --aggregate async \
         --rounds 5 --clients-per-round 4 --quorum 2 --bw-sigma 2.0
     python -m repro.launch.simulate --clock event --aggregate tree \
         --rounds 3 --bw-sigma 2.0
+    echo "== population-scale smoke (10^4 clients, vectorized dispatch)"
+    python -m repro.launch.simulate --clock event --population 10000 \
+        --clients-per-round 16 --rounds 2 --bw-sigma 2.0
 fi
 echo "CI OK ($TIER)"

@@ -1,0 +1,127 @@
+"""Precomputed gather-plan Count Sketch encoder — the CPU hot path.
+
+``fetchsgd.sketch_grads`` recomputes its hash family on the fly and
+scatters with ``.at[idx].add`` — on TPU the hashing is free ALU work and
+the scatter maps onto the MXU kernel, but on CPU the XLA scatter walks
+elements one at a time (~100ns each), which makes the sketch *the*
+dominant per-client cost of a federated simulation (24ms vs 3ms for the
+gradient itself at micro scale).
+
+The hash family is a pure function of static quantities — (chunk offset,
+chunk size, rows, cols, hash key) — so for a fixed ``ParamLayout`` and
+``FetchSGDConfig`` the entire scatter pattern is known at trace time.
+This module precomputes, per (chunk, sketch row):
+
+* ``sgn`` — the Rademacher signs, applied by elementwise multiply;
+* ``P`` — a ``(cols, L)`` *position matrix*: ``P[c]`` lists the chunk
+  positions hashing to bucket ``c`` in element order, padded with a
+  sentinel index pointing at an appended ``0.0``.
+
+Encoding is then sign-multiply -> gather -> ``L`` columnwise adds: pure
+contiguous vector work, ~16x faster than the scatter on CPU.  Buckets and
+signs match ``fetchsgd.sketch_grads`` exactly — on integer-valued
+gradients the tables are bit-for-bit equal (pinned in
+``tests/test_population.py``) — but the within-bucket summation is
+associated differently (per-bucket element order here vs. per-chunk
+partial tables there), so real-valued tables differ at the last ulp.
+That is fine for every byte-identity contract the federation runtime
+makes (checkpoints, RoundRecord streams, vectorized-vs-per-object,
+resume determinism): those compare runs that route through the *same*
+encoder, which ``fed.orchestrator`` guarantees by threading one encode
+fn through all of its paths.
+
+``build_encoder`` returns ``None`` for layouts it cannot serve (multi-
+offset expert-parallel chunks, whose offset depends on the runtime shard
+index); callers fall back to ``sketch_grads``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fetchsgd as F
+from . import hashing
+from . import layout as layout_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class _ChunkPlan:
+    leaf: int
+    row_start: int
+    n_rows: int
+    # per sketch row: (P (cols, L) int32 positions, sgn (m,) float32, L)
+    row_plans: tuple[tuple[jax.Array, jax.Array, int], ...]
+
+
+def _row_plan(lo, hi, row: int, m: int, cfg: F.FetchSGDConfig
+              ) -> tuple[jax.Array, jax.Array, int]:
+    idx = np.asarray(hashing.bucket_hash(lo, hi, row, cfg.cols, cfg.hash_key))
+    sgn = np.asarray(hashing.sign_hash(lo, hi, row, cfg.hash_key))
+    order = np.argsort(idx, kind="stable")       # element order per bucket
+    counts = np.bincount(idx, minlength=cfg.cols)
+    L = max(int(counts.max()), 1)
+    startpos = np.zeros(cfg.cols + 1, np.int64)
+    np.cumsum(counts, out=startpos[1:])
+    P = np.full((cfg.cols, L), m, np.int32)      # m -> appended 0.0 sentinel
+    srt = idx[order]
+    rank = np.arange(len(order)) - startpos[srt]
+    P[srt, rank] = order
+    return jnp.asarray(P), jnp.asarray(sgn.astype(np.float32)), L
+
+
+def build_plans(layout: layout_lib.ParamLayout,
+                cfg: F.FetchSGDConfig) -> list[_ChunkPlan] | None:
+    """Static gather plans in ``sketch_grads``' chunk accumulation order,
+    or None when the layout needs runtime offsets (expert-parallel)."""
+    groups: dict[tuple[int, int, int], list] = {}
+    for lc in layout.local_chunks:
+        groups.setdefault((lc.leaf, lc.n_rows, len(lc.offsets)),
+                          []).append(lc)
+    plans: list[_ChunkPlan] = []
+    for (leaf, n_rows, n_offs), lcs in sorted(groups.items()):
+        if n_offs != 1:
+            return None
+        row_len = lcs[0].row_len
+        m = n_rows * row_len
+        for lc in lcs:
+            hi, lo = hashing.split64(lc.offsets[0], m)
+            plans.append(_ChunkPlan(
+                leaf=leaf, row_start=lc.row_start, n_rows=n_rows,
+                row_plans=tuple(_row_plan(lo, hi, j, m, cfg)
+                                for j in range(cfg.rows))))
+    return plans
+
+
+def encode(grads, layout: layout_lib.ParamLayout, cfg: F.FetchSGDConfig,
+           plans: list[_ChunkPlan]) -> jax.Array:
+    """S(g) via the precomputed plans — same buckets/signs as
+    ``sketch_grads``; summation association differs at last-ulp."""
+    views = layout_lib.leaf_views(grads, layout)
+    rows_acc = [jnp.zeros((cfg.cols,), jnp.float32) for _ in range(cfg.rows)]
+    for plan in plans:
+        vals = jax.lax.dynamic_slice_in_dim(
+            views[plan.leaf], plan.row_start, plan.n_rows, axis=0).reshape(-1)
+        for j, (P, sgn, L) in enumerate(plan.row_plans):
+            sv = jnp.concatenate([vals * sgn, jnp.zeros((1,), jnp.float32)])
+            gathered = sv[P]                     # (cols, L)
+            acc = jnp.zeros((cfg.cols,), jnp.float32)
+            for pos in range(L):                 # left-assoc: scatter order
+                acc = acc + gathered[:, pos]
+            rows_acc[j] = rows_acc[j] + acc
+    return jnp.stack(rows_acc)
+
+
+def build_encoder(layout: layout_lib.ParamLayout, cfg: F.FetchSGDConfig):
+    """Un-jitted ``grads -> table`` closure, or None (unsupported layout).
+
+    Jit at the call site (possibly inside a larger program — the fed
+    orchestrator maps it over cohort chunks with ``lax.map``).
+    """
+    plans = build_plans(layout, cfg)
+    if plans is None:
+        return None
+    return lambda grads: encode(grads, layout, cfg, plans)

@@ -28,6 +28,6 @@ from .checkpoint import latest_round, restore, save              # noqa: F401
 from .orchestrator import (FederationConfig, FedRunResult,       # noqa: F401
                            Orchestrator, RoundRecord, StragglerModel,
                            run_federated)
-from .simtime import (ClientProfile, Event, EventQueue,          # noqa: F401
-                      HeterogeneityConfig, HeterogeneityModel,
-                      SimTimeConfig)
+from .simtime import (BucketedEventQueue, ClientProfile,         # noqa: F401
+                      Event, EventQueue, HeterogeneityConfig,
+                      HeterogeneityModel, PopulationModel, SimTimeConfig)

@@ -168,6 +168,21 @@ class Aggregator:
                   ) -> tuple[jax.Array, AggregationStats]:
         raise NotImplementedError
 
+    def aggregate_stream(self, pairs, *, round_idx: float = 0,
+                         bandwidths: Sequence[float] | None = None
+                         ) -> tuple[jax.Array, AggregationStats]:
+        """Merge an *iterator* of ``(table, weight)`` pairs.
+
+        The population-scale event loop materializes client sketches
+        lazily, one at a time; this consumes them as they appear, so the
+        server never holds more than O(fanout * depth) tables at once —
+        while producing the **bitwise-identical** table and stats that
+        ``aggregate(list(tables), weights=...)`` would (same summation
+        order, same ``sum(weights)`` order; pinned in
+        ``tests/test_population.py``).
+        """
+        raise NotImplementedError
+
     @staticmethod
     def _weighted(tables, weights):
         if weights is None:
@@ -194,6 +209,22 @@ class FlatAggregator(Aggregator):
             policy=self.name, n_fresh=len(tables), n_late=0,
             total_weight=total_w,
             levels=_leaf_level(len(tables), self.table_bytes, bandwidths))
+        self._observe(stats)
+        return table, stats
+
+    def aggregate_stream(self, pairs, *, round_idx=0, bandwidths=None):
+        # identical left-assoc fold as aggregate(): one live table, ever
+        n, total_w = 0, 0
+        acc = self._zeros()
+        for t, w in pairs:
+            w = float(w)
+            acc = acc + (t if w == 1.0 else w * t)
+            total_w = total_w + w
+            n += 1
+        table = acc / total_w if total_w > 0 else acc
+        stats = AggregationStats(
+            policy=self.name, n_fresh=n, n_late=0, total_weight=total_w,
+            levels=_leaf_level(n, self.table_bytes, bandwidths))
         self._observe(stats)
         return table, stats
 
@@ -234,6 +265,48 @@ class TreeAggregator(Aggregator):
             policy=self.name, n_fresh=len(tables), n_late=0,
             total_weight=total_w,
             levels=tree_levels(len(tables), self.fanout, self.table_bytes,
+                               leaf_bandwidths=bandwidths,
+                               link_bandwidth=self.link_bandwidth))
+        self._observe(stats)
+        return table, stats
+
+    def aggregate_stream(self, pairs, *, round_idx=0, bandwidths=None):
+        # Streaming tree fold: per-level stacks of < fanout pending nodes.
+        # A level folds eagerly the moment its stack fills — the groups are
+        # the same positional chunks ``aggregate`` forms, folded in the same
+        # left-assoc order, so the result is bitwise identical while live
+        # memory stays O(fanout * log_fanout(n)) tables.
+        f = self.fanout
+        stacks: list[list] = []
+        n, total_w = 0, 0
+        for t, w in pairs:
+            w = float(w)
+            total_w = total_w + w
+            n += 1
+            node, lv = (t if w == 1.0 else w * t), 0
+            while True:
+                if lv == len(stacks):
+                    stacks.append([])
+                stacks[lv].append(node)
+                if len(stacks[lv]) < f:
+                    break
+                group, stacks[lv] = stacks[lv], []
+                node = sum(group[1:], start=group[0])
+                lv += 1
+        # end flush, bottom-up: each level's leftover nodes (plus the fold
+        # of the level below, which is positionally its *last* node) form
+        # exactly the final — possibly partial — chunk of the batch fold
+        carry = None
+        for stack in stacks:
+            if carry is not None:
+                stack.append(carry)
+            if stack:
+                carry = sum(stack[1:], start=stack[0])
+        acc = carry if carry is not None else self._zeros()
+        table = acc / total_w if total_w > 0 else acc
+        stats = AggregationStats(
+            policy=self.name, n_fresh=n, n_late=0, total_weight=total_w,
+            levels=tree_levels(n, self.fanout, self.table_bytes,
                                leaf_bandwidths=bandwidths,
                                link_bandwidth=self.link_bandwidth))
         self._observe(stats)
@@ -370,6 +443,63 @@ class AsyncBufferedAggregator(Aggregator):
             policy=self.name, n_fresh=len(tables), n_late=n_late,
             total_weight=total_w, max_staleness=max_s,
             levels=_leaf_level(n, self.table_bytes, bandwidths))
+        self._observe(stats)
+        return table, stats
+
+    def merge_timed_stream(self, arrivals, *, now, bandwidths=None):
+        """Submit-and-drain an *iterator* of ``(table, produced, arrival,
+        weight)`` tuples in one pass.
+
+        Bitwise equivalent to ``submit(...)`` per arrival followed by
+        ``aggregate([], round_idx=now)`` — the drain visits previously
+        buffered entries first, then the arrivals in order, applying the
+        identical discount / too-stale / keep logic — but each arrival's
+        table is folded the moment the iterator yields it, so the
+        population-scale event loop never buffers a cohort's tables.
+        """
+        tele = self.tele
+        acc, late_w, n_late, max_s = self._zeros(), 0.0, 0, 0
+        keep = []
+
+        def _fold(entry) -> None:
+            nonlocal acc, late_w, n_late, max_s
+            if entry["arrival"] > now:
+                keep.append(entry)
+                return
+            s = now - entry["produced"]
+            if self._too_stale(s):
+                if tele.enabled:
+                    tele.counter("agg.async.dropped_stale").inc()
+                return
+            w = entry["weight"] * self._discount_for(s)
+            acc = acc + w * entry["table"]
+            late_w += w
+            n_late += 1
+            max_s = max(max_s, s)
+            if tele.enabled:
+                tele.histogram("agg.async.staleness_age").observe(s)
+
+        for entry in self._buffer:
+            _fold(entry)
+        for table, produced, arrival, weight in arrivals:
+            if arrival <= produced:
+                raise ValueError("arrival_round must be > produced_round")
+            _fold(dict(table=table, produced=produced, arrival=arrival,
+                       weight=float(weight)))
+        self._buffer = keep
+        if tele.enabled:
+            tele.counter("agg.async.late_merged").inc(n_late)
+            tele.gauge("agg.async.buffer_depth").set(len(self._buffer))
+        # tail of aggregate([]) with an empty fresh list, op for op — the
+        # ``zeros + acc`` add included, so even signed-zero entries match
+        total_w = 0 + late_w
+        out = self._zeros()
+        out = out + acc if n_late else out
+        table = out / total_w if total_w > 0 else out
+        stats = AggregationStats(
+            policy=self.name, n_fresh=0, n_late=n_late,
+            total_weight=total_w, max_staleness=max_s,
+            levels=_leaf_level(n_late, self.table_bytes, bandwidths))
         self._observe(stats)
         return table, stats
 

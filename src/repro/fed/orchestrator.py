@@ -43,6 +43,7 @@ import numpy as np
 
 from repro import obs
 from repro.core import compression, fetchsgd as F
+from repro.core import gather_sketch
 from repro.core import layout as layout_lib
 from repro.data import federated
 from repro.models import transformer
@@ -86,12 +87,17 @@ class FederationConfig:
     seed: int = 0
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0                 # 0 = only if dir set: final round
+    vectorized: bool = False                  # population-scale event loop:
+                                              # batched dispatch + lazy events
 
     def __post_init__(self):
         if self.clock not in ("round", "event"):
             raise ValueError(f"clock must be 'round'|'event', got {self.clock}")
         if self.weight_by not in ("uniform", "samples", "profile"):
             raise ValueError(f"unknown weight_by {self.weight_by!r}")
+        if self.vectorized and self.clock != "event":
+            raise ValueError("vectorized population dispatch requires "
+                             "clock='event'")
 
 
 @dataclasses.dataclass
@@ -134,6 +140,12 @@ def make_grad_fn(cfg) -> Callable:
     return gf
 
 
+# Clients materialized per jitted call in the vectorized event loop: large
+# enough to amortize dispatch overhead, small enough that the transient
+# (chunk, rows, cols) table stack stays negligible next to the model.
+COHORT_CHUNK = 16
+
+
 def _round_rng(seed: int, round_idx: int,
                stream: int = 0) -> np.random.Generator:
     # tuple entropy goes through SeedSequence mixing — adjacent (seed, round,
@@ -171,13 +183,38 @@ class Orchestrator:
         self.lr_fn = lr_fn or triangular(peak_lr, fed_cfg.rounds)
         self.grad_fn = grad_fn or make_grad_fn(model_cfg)
         self.is_event = fed_cfg.clock == "event"
+        self.vectorized = fed_cfg.vectorized
         self.sim_cfg = fed_cfg.simtime or simtime_lib.SimTimeConfig()
+        if self.is_event:
+            n_clients = getattr(dataset, "n_clients", 0)
+            if n_clients < 1:
+                raise ValueError("event-clock federation needs a dataset "
+                                 "with n_clients >= 1 (empty population)")
+            if fed_cfg.clients_per_round > n_clients:
+                raise ValueError(
+                    f"cohort of {fed_cfg.clients_per_round} clients exceeds "
+                    f"the population of {n_clients} — shrink "
+                    f"clients_per_round or grow the population")
         self.het = (simtime_lib.HeterogeneityModel(
                         self.sim_cfg.heterogeneity, fed_cfg.seed)
                     if self.is_event or fed_cfg.weight_by == "profile"
                     else None)
-        self._queue = simtime_lib.EventQueue()
+        # population-scale path: batched profile columns + bucketed queue
+        # (one heap entry per *bucket*, not per client)
+        self.pop = (simtime_lib.PopulationModel(
+                        self.sim_cfg.heterogeneity, fed_cfg.seed)
+                    if self.vectorized else None)
+        self._queue = (simtime_lib.BucketedEventQueue(
+                           self.sim_cfg.queue_bucket_s)
+                       if self.vectorized else simtime_lib.EventQueue())
         self._now = 0.0
+        # params snapshots for in-flight lazy events, keyed by dispatch
+        # round; refcounted so server memory stays O(active rounds), never
+        # O(population)
+        self._snapshots: dict[int, Any] = {}
+        self._snap_refs: dict[int, int] = {}
+        self._cohort_fn: Any = None     # lazy; False = probed, unavailable
+        self._default_grad = grad_fn is None
         self.aggregator = agg_lib.make_aggregator(
             fed_cfg.aggregate, fs_cfg, fanout=fed_cfg.tree_fanout,
             discount=fed_cfg.staleness_discount,
@@ -191,7 +228,17 @@ class Orchestrator:
         self.meter = compression.TrafficMeter(d=self.layout.total)
 
         lay, cfg = self.layout, fs_cfg
-        self._sketch = jax.jit(lambda g: F.sketch_grads(g, lay, cfg))
+        # Precomputed gather-plan encoder: same buckets and signs as
+        # F.sketch_grads — only within-bucket summation association
+        # differs (last-ulp; exact on integer-valued grads, pinned in
+        # tests/test_population.py) — ~16x faster on CPU, the federated
+        # hot path.  Multi-offset EP layouts fall back to the scatter
+        # encoder.  Every orchestrator path (round clock, per-object
+        # event, chunked cohort) routes through this one fn, which is
+        # what makes vectorized and per-object runs byte-identical.
+        self._encoder = gather_sketch.build_encoder(lay, cfg)
+        self._sketch = jax.jit(self._encoder if self._encoder is not None
+                               else (lambda g: F.sketch_grads(g, lay, cfg)))
         self._server = jax.jit(
             lambda t, st, lr: F.server_step(t, st, lr, lay, cfg))
         self._apply = jax.jit(lambda p, d: F.apply_delta(p, lay, d))
@@ -220,15 +267,29 @@ class Orchestrator:
                 fc.min_clients_per_round, fc.clients_per_round + 1))
         return federated.sample_clients(self.dataset.n_clients, w, r, fc.seed)
 
-    def _fate(self, rng: np.random.Generator) -> tuple[str, int]:
-        """(fresh|late|dropped, delay) for one sampled client."""
+    def _fates(self, rng: np.random.Generator,
+               n: int) -> tuple[np.ndarray, np.ndarray]:
+        """Whole-cohort client fates: (codes, delays).
+
+        ``codes[i]``: 0 fresh, 1 late (``delays[i]`` rounds), 2 dropped —
+        the same marginal distribution as drawing per client, but batched
+        (one uniform draw for the cohort, one delay draw for the late
+        subset) so a 10^5-client cohort costs two rng calls.  Every path —
+        round clock, per-object event loop, vectorized event loop — shares
+        this draw, which is what makes vectorized and per-object runs see
+        *identical* fates (pinned in tests/test_population.py).
+        """
         sm = self.fed_cfg.straggler
-        u = rng.random()
-        if u < sm.dropout_prob:
-            return "dropped", 0
-        if u < sm.dropout_prob + sm.straggle_prob:
-            return "late", int(rng.integers(1, sm.max_delay + 1))
-        return "fresh", 0
+        u = rng.random(n)
+        codes = np.zeros(n, np.int8)
+        codes[u < sm.dropout_prob + sm.straggle_prob] = 1
+        codes[u < sm.dropout_prob] = 2
+        delays = np.zeros(n, np.int64)
+        late = codes == 1
+        if late.any():
+            delays[late] = rng.integers(1, sm.max_delay + 1,
+                                        size=int(late.sum()))
+        return codes, delays
 
     def _client_batch(self, c: int) -> dict:
         return {k: jnp.asarray(v) for k, v in
@@ -296,11 +357,15 @@ class Orchestrator:
             traffic["upload_compression_x"])
         tele.histogram("fed.cohort_size").observe(len(rec.cohort))
         if self.is_event:
+            pop_n = getattr(self.dataset, "n_clients", None)
             ev.update(t_dispatch=rec.t_dispatch, t_virtual=rec.t_virtual,
                       critical_path_s=rec.critical_path_s,
-                      queue_depth=len(self._queue))
+                      queue_depth=len(self._queue),
+                      population_size=pop_n)
             tele.gauge("event.queue_depth").set(len(self._queue))
             tele.gauge("event.t_virtual").set(rec.t_virtual)
+            if pop_n is not None:
+                tele.gauge("fed.population_size").set(pop_n)
             wall = time.perf_counter() - self._wall0
             if wall > 0 and rec.t_virtual is not None:
                 ratio = rec.t_virtual / wall
@@ -360,12 +425,13 @@ class Orchestrator:
                                   agg_lib.AsyncBufferedAggregator)
             sample_health = self._sample_health(r)
 
+            codes, delays = self._fates(rng, len(clients))
             fresh, fresh_w, losses, n_dropped, n_straggling = [], [], [], 0, 0
             grad_acc = None
             with self.tele.span("fed.clients") as sp:
-                for c in clients:
-                    fate, delay = self._fate(rng)
-                    if fate == "dropped":
+                for i, c in enumerate(clients):
+                    fate, delay = codes[i], int(delays[i])
+                    if fate == 2:
                         n_dropped += 1
                         continue
                     batch = self._client_batch(int(c))
@@ -373,7 +439,7 @@ class Orchestrator:
                     table = self._sketch(grads)
                     losses.append(float(loss))
                     w = self._client_weight(int(c), batch)
-                    if fate == "late":
+                    if fate == 1:
                         if is_async:
                             self.aggregator.submit(
                                 table, produced_round=r,
@@ -429,15 +495,16 @@ class Orchestrator:
         now = self._now
         clients = self._cohort(r)
         rng = _round_rng(fc.seed, r, stream=1)
+        codes, delays = self._fates(rng, len(clients))
         n_dropped = 0
         sample_health = self._sample_health(r)
         h_tables, h_weights, grad_acc = ([], [], None) if sample_health else \
             (None, None, None)
         for slot, c in enumerate(clients):
-            fate, delay = self._fate(rng)
-            if fate == "dropped":
+            if codes[slot] == 2:
                 n_dropped += 1
                 continue
+            delay = int(delays[slot])
             batch = self._client_batch(int(c))
             loss, grads = self.grad_fn(self.params, batch)
             table = self._sketch(grads)
@@ -466,6 +533,171 @@ class Orchestrator:
                 produced=now, weight=w, loss=float(loss), table=table))
         return clients, n_dropped, (h_tables, h_weights, grad_acc)
 
+    # -- population-scale vectorized event path -----------------------------
+
+    def _client_weights_vec(self, ids: np.ndarray,
+                            cols: dict) -> np.ndarray:
+        """Batched ``_client_weight``: same values, no per-client batches."""
+        wb = self.fed_cfg.weight_by
+        if wb == "profile":
+            return cols["weight"]
+        if wb == "samples":
+            spc = getattr(self.dataset, "samples_per_client", None)
+            if spc is not None:
+                return np.full(len(ids), float(spc))
+            return np.array([float(len(self._client_batch(int(c))["tokens"]))
+                             for c in ids])
+        return np.ones(len(ids))
+
+    def _dispatch_cohort_vec(self, r: int) -> tuple[np.ndarray, int, tuple]:
+        """Vectorized ``_dispatch_cohort``: O(cohort) numpy metadata, zero
+        gradient work.
+
+        Instead of computing each client's (loss, grads, sketch) at
+        dispatch, push *lazy* events (loss/table None) carrying only
+        metadata, and snapshot the current params once per round —
+        immutable jax arrays, so the "snapshot" is a reference, not a copy.
+        The gradient + sketch-encode runs at *merge* time against that
+        snapshot through the identical jitted fns, so every byte
+        (RoundRecords, checkpoints) matches the per-object path while
+        dispatching 10^5-10^6 clients in milliseconds.
+        """
+        fc = self.fed_cfg
+        tele = self.tele
+        now = self._now
+        clients = self._cohort(r)
+        rng = _round_rng(fc.seed, r, stream=1)
+        codes, delays = self._fates(rng, len(clients))
+        sent = codes != 2
+        n_dropped = int(len(clients) - sent.sum())
+        ids = np.asarray(clients)[sent].astype(np.int64)
+        slots = np.nonzero(sent)[0]
+        cols = self.pop.columns(ids)
+        table_bytes = self.aggregator.table_bytes
+        finish = self.pop.finish_times(cols, now, table_bytes,
+                                       compute_scale=1.0 + delays[sent])
+        weights = self._client_weights_vec(ids, cols)
+        if tele.enabled and len(ids):
+            idle = self.pop.next_available(cols, now) - now
+            tele.histogram("event.client_idle_s").observe_many(idle)
+            tele.counter("event.client_idle_s_total").inc(float(idle.sum()))
+            tele.histogram("event.upload_s").observe_many(
+                table_bytes / cols["bandwidth"])
+        evs = [simtime_lib.Event(
+                   time=float(finish[k]), round_produced=r,
+                   slot=int(slots[k]), client=int(ids[k]), produced=now,
+                   weight=float(weights[k]), loss=None, table=None)
+               for k in range(len(ids))]
+        self._queue.push_batch(evs)
+        if evs:
+            self._snapshots[r] = self.params
+            self._snap_refs[r] = len(evs)
+        return clients, n_dropped, (None, None, None)
+
+    def _get_cohort_fn(self):
+        """Jitted chunk-of-clients (grad + sketch) fn, or None (fallback to
+        one jit call per event).  Lazy import: launch.steps imports
+        repro.fed at module scope."""
+        if self._cohort_fn is None:
+            if self._default_grad:
+                from repro.launch import steps as steps_lib
+                self._cohort_fn = steps_lib.make_cohort_fn(
+                    self.model_cfg, self.layout, self.fs_cfg,
+                    encode_fn=self._encoder)
+            if self._cohort_fn is None:
+                self._cohort_fn = False
+        return self._cohort_fn or None
+
+    def _materialize(self, events: list, idxs: list[int],
+                     r: int) -> dict[int, tuple[float, Any]]:
+        """Compute {idx: (loss, table)} for lazy events of dispatch round
+        ``r`` against its params snapshot.
+
+        Uniform-shape client batches go through one jitted ``lax.map``
+        call (``launch.steps.make_cohort_fn``), padded to COHORT_CHUNK by
+        repeating the last batch — per-element map semantics mean the
+        padded lanes never touch the real outputs, so each (loss, table)
+        is bitwise identical to a standalone per-event jit call.
+        """
+        params = self._snapshots[r]
+        batches = [self._client_batch(int(events[j].client)) for j in idxs]
+        fn = self._get_cohort_fn()
+        shapes = {b["tokens"].shape for b in batches}
+        if (fn is not None and len(shapes) == 1
+                and all("labels" in b for b in batches)):
+            toks = [b["tokens"] for b in batches]
+            labs = [b["labels"] for b in batches]
+            while len(toks) < COHORT_CHUNK:
+                toks.append(toks[-1])
+                labs.append(labs[-1])
+            losses, tables = fn(params, jnp.stack(toks), jnp.stack(labs))
+            return {j: (float(losses[k]), tables[k])
+                    for k, j in enumerate(idxs)}
+        out = {}
+        for j, batch in zip(idxs, batches):
+            loss, grads = self.grad_fn(params, batch)
+            out[j] = (float(loss), self._sketch(grads))
+        return out
+
+    def _arrival_stream(self, arrivals: list):
+        """Yield ``(event, table)`` in pop order, materializing lazy events
+        chunk-by-chunk.
+
+        At most COHORT_CHUNK tables per in-flight dispatch round are alive
+        at once; the streaming aggregator folds each one before the next
+        chunk materializes, so peak server memory is O(sketch table), not
+        O(cohort).  A round's params snapshot is released the moment its
+        last in-flight event materializes.
+        """
+        by_round: dict[int, list[int]] = {}
+        for i, e in enumerate(arrivals):
+            if e.table is None:
+                by_round.setdefault(e.round_produced, []).append(i)
+        ptr = {rr: 0 for rr in by_round}
+        cache: dict[int, tuple[float, Any]] = {}
+        for i, e in enumerate(arrivals):
+            if e.table is not None:      # restored from checkpoint: eager
+                yield e, e.table
+                continue
+            rr = e.round_produced
+            if i not in cache:
+                idxs = by_round[rr][ptr[rr]:ptr[rr] + COHORT_CHUNK]
+                ptr[rr] += len(idxs)
+                cache.update(self._materialize(arrivals, idxs, rr))
+            loss, table = cache.pop(i)
+            e.loss = loss
+            self._snap_refs[rr] -= 1
+            if self._snap_refs[rr] == 0:
+                del self._snap_refs[rr]
+                del self._snapshots[rr]
+            yield e, table
+
+    def _materialized_events(self, events: list) -> list:
+        """Checkpoint form of the in-flight queue: lazy events get their
+        (loss, table) computed from the dispatch snapshot — same fns, same
+        inputs as the merge-time path, so the resumed run replays the
+        identical bytes.  The live queue stays lazy (snapshots are kept)."""
+        out = list(events)
+        by_round: dict[int, list[int]] = {}
+        for i, e in enumerate(out):
+            if e.table is None:
+                by_round.setdefault(e.round_produced, []).append(i)
+        for rr, idxs in by_round.items():
+            for j0 in range(0, len(idxs), COHORT_CHUNK):
+                part = idxs[j0:j0 + COHORT_CHUNK]
+                mat = self._materialize(out, part, rr)
+                for j in part:
+                    loss, table = mat[j]
+                    out[j] = dataclasses.replace(out[j], loss=loss,
+                                                 table=table)
+        return out
+
+    def _arrival_bandwidths(self, arrivals: list) -> list[float]:
+        if self.vectorized:
+            ids = np.array([e.client for e in arrivals], np.int64)
+            return self.pop.columns(ids)["bandwidth"].tolist()
+        return [self.het.profile(e.client).bandwidth for e in arrivals]
+
     def _run_event_round(self, r: int) -> RoundRecord:
         """One server update of the event loop.
 
@@ -490,7 +722,10 @@ class Orchestrator:
             t_dispatch = self._now
             with tele.span("fed.dispatch"):
                 # per-client float(loss) inside the dispatch already syncs
-                clients, n_dropped, health = self._dispatch_cohort(r)
+                # (vectorized: metadata only, the sync happens at merge)
+                clients, n_dropped, health = (
+                    self._dispatch_cohort_vec(r) if self.vectorized
+                    else self._dispatch_cohort(r))
             if tele.enabled:
                 tele.gauge("event.queue_depth").set(len(self._queue))
                 tele.histogram("event.queue_depth").observe(len(self._queue))
@@ -502,11 +737,23 @@ class Orchestrator:
             arrivals = [self._queue.pop() for _ in range(n_pop)]
             if arrivals:
                 self._now = arrivals[-1].time    # heap order: the max popped
-            losses = [e.loss for e in arrivals]
-            bandwidths = [self.het.profile(e.client).bandwidth
-                          for e in arrivals]
+            bandwidths = self._arrival_bandwidths(arrivals)
             with tele.span("fed.aggregate") as sp:
-                if is_async:
+                if self.vectorized:
+                    # lazy events materialize chunk-by-chunk inside the
+                    # stream; the aggregator folds each table before the
+                    # next chunk exists — O(sketch) server memory
+                    stream = self._arrival_stream(arrivals)
+                    if is_async:
+                        table, stats = self.aggregator.merge_timed_stream(
+                            ((t, e.produced, e.time, e.weight)
+                             for e, t in stream),
+                            now=self._now, bandwidths=bandwidths)
+                    else:
+                        table, stats = self.aggregator.aggregate_stream(
+                            ((t, e.weight) for e, t in stream),
+                            round_idx=r, bandwidths=bandwidths)
+                elif is_async:
                     for e in arrivals:
                         self.aggregator.submit(e.table,
                                                produced_round=e.produced,
@@ -520,6 +767,8 @@ class Orchestrator:
                         weights=[e.weight for e in arrivals],
                         round_idx=r, bandwidths=bandwidths)
                 sp.sync(table)
+            # after the merge: every arrival's loss is materialized
+            losses = [e.loss for e in arrivals]
             with tele.span("fed.server_update") as sp:
                 if stats.total_weight > 0:
                     delta, self.opt_state = self._server(table,
@@ -562,8 +811,12 @@ class Orchestrator:
                         if isinstance(self.aggregator,
                                       agg_lib.AsyncBufferedAggregator)
                         else None)
-                sim = ({"now": self._now, "events": self._queue.state()}
-                       if self.is_event else None)
+                sim = None
+                if self.is_event:
+                    events = self._queue.state()
+                    if self.vectorized:
+                        events = self._materialized_events(events)
+                    sim = {"now": self._now, "events": events}
                 ckpt_lib.save(fc.checkpoint_dir, self.params, self.opt_state,
                               r, extra={"aggregate": fc.aggregate,
                                         "clock": fc.clock},

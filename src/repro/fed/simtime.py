@@ -33,9 +33,11 @@ still an exact (discount-weighted) sketch of the weighted mean gradient.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
-from typing import Any
+import math
+from typing import Any, Iterable
 
 import numpy as np
 
@@ -138,6 +140,107 @@ class HeterogeneityModel:
         return prof
 
 
+class PopulationModel:
+    """Vectorized ``HeterogeneityModel``: batched per-client profile columns.
+
+    Samples the *same* per-client stream as ``HeterogeneityModel.profile``
+    — ``np.random.default_rng((seed, client_id, PROFILE_STREAM))`` drawing
+    compute, bandwidth, weight, duty, offset in that order — so
+    ``profile(i)`` is field-for-field equal for the same seed (pinned in
+    ``tests/test_population.py``).  Clients are sampled lazily in fixed-size
+    id blocks and cached as float64 column arrays, which is what lets the
+    event loop dispatch 10^4-10^6-client cohorts without ever holding one
+    Python ``ClientProfile`` per client.
+
+    All vectorized time arithmetic (``next_available`` / ``finish_times``)
+    performs the identical IEEE-double operations as the scalar
+    ``ClientProfile`` methods, so event timestamps — and therefore queue
+    pop order and the whole RoundRecord stream — match the per-object path
+    bitwise.
+    """
+
+    COLS = ("compute", "bandwidth", "weight", "duty", "offset")
+
+    def __init__(self, cfg: HeterogeneityConfig, seed: int = 0,
+                 block: int = 4096):
+        if block < 1:
+            raise ValueError("block must be >= 1")
+        self.cfg = cfg
+        self.seed = seed
+        self.block = int(block)
+        self._blocks: dict[int, np.ndarray] = {}   # block_id -> (block, 5)
+
+    def _fill(self, b: int) -> np.ndarray:
+        cfg = self.cfg
+        out = np.empty((self.block, len(self.COLS)), np.float64)
+        for i in range(self.block):
+            # exact draw order of HeterogeneityModel.profile
+            rng = np.random.default_rng((self.seed, b * self.block + i,
+                                         PROFILE_STREAM))
+            out[i, 0] = cfg.compute_median * float(
+                np.exp(cfg.compute_sigma * rng.standard_normal()))
+            out[i, 1] = cfg.bandwidth_median * float(
+                np.exp(cfg.bandwidth_sigma * rng.standard_normal()))
+            out[i, 2] = float(np.exp(cfg.weight_sigma * rng.standard_normal()))
+            out[i, 3] = float(rng.uniform(cfg.avail_duty_min,
+                                          cfg.avail_duty_max))
+            out[i, 4] = (float(rng.uniform(0.0, cfg.avail_period))
+                         if cfg.avail_period > 0 else 0.0)
+        return out
+
+    def columns(self, ids: np.ndarray) -> dict[str, np.ndarray]:
+        """Profile columns for an id array: {compute, bandwidth, weight,
+        duty, offset} -> float64 arrays aligned with ``ids``."""
+        ids = np.asarray(ids, np.int64)
+        if ids.size and ids.min() < 0:
+            raise ValueError("client ids must be >= 0")
+        rows = np.empty((ids.size, len(self.COLS)), np.float64)
+        for b in np.unique(ids // self.block):
+            blk = self._blocks.get(int(b))
+            if blk is None:
+                blk = self._blocks[int(b)] = self._fill(int(b))
+            sel = (ids // self.block) == b
+            rows[sel] = blk[ids[sel] - b * self.block]
+        return dict(zip(self.COLS, rows.T))
+
+    def profile(self, client_id: int) -> ClientProfile:
+        """Scalar view — field-for-field equal to HeterogeneityModel."""
+        c = self.columns(np.asarray([client_id]))
+        return ClientProfile(
+            compute_seconds=float(c["compute"][0]),
+            bandwidth=float(c["bandwidth"][0]),
+            weight=float(c["weight"][0]),
+            avail_period=self.cfg.avail_period,
+            avail_duty=float(c["duty"][0]),
+            avail_offset=float(c["offset"][0]))
+
+    def next_available(self, cols: dict[str, np.ndarray],
+                       t: float) -> np.ndarray:
+        """Vectorized ``ClientProfile.next_available`` (same IEEE ops)."""
+        period = self.cfg.avail_period
+        n = len(cols["duty"])
+        if period <= 0:
+            return np.full(n, float(t), np.float64)
+        span = cols["duty"] * period
+        phase = (t - cols["offset"]) % period
+        # duty >= 1 gives span == period > phase, so the "available now"
+        # branch fires exactly where the scalar early-return does
+        return np.where((phase < span) | (cols["duty"] >= 1.0),
+                        float(t), t + (period - phase))
+
+    def finish_times(self, cols: dict[str, np.ndarray], t: float,
+                     table_bytes: int,
+                     compute_scale: np.ndarray | float = 1.0) -> np.ndarray:
+        """Vectorized ``ClientProfile.finish_time`` for one dispatch."""
+        start = self.next_available(cols, t)
+        finish = (start + cols["compute"] * compute_scale
+                  + table_bytes / cols["bandwidth"])
+        if not np.isfinite(finish).all():
+            raise ValueError("non-finite upload finish time — degenerate "
+                             "bandwidth/availability profile")
+        return finish
+
+
 @dataclasses.dataclass(frozen=True)
 class SimTimeConfig:
     """Knobs of the event-driven clock."""
@@ -148,12 +251,15 @@ class SimTimeConfig:
                                       # (None = clients_per_round)
     link_bandwidth: float = 1e8       # backbone bytes/s: internal tree edges
     heterogeneity: HeterogeneityConfig = HeterogeneityConfig()
+    queue_bucket_s: float = 1.0       # BucketedEventQueue bucket width
 
     def __post_init__(self):
         if self.staleness_lambda < 0:
             raise ValueError("staleness_lambda must be >= 0")
         if self.quorum is not None and self.quorum < 1:
             raise ValueError("quorum must be >= 1")
+        if self.queue_bucket_s <= 0:
+            raise ValueError("queue_bucket_s must be > 0")
 
 
 @dataclasses.dataclass
@@ -166,8 +272,8 @@ class Event:
     client: int
     produced: float       # dispatch time: the params snapshot this grad saw
     weight: float
-    loss: float
-    table: Any            # (rows, cols) sketch
+    loss: float | None    # None: lazy (vectorized path computes at merge)
+    table: Any            # (rows, cols) sketch, or None when lazy
 
     def key(self) -> tuple[float, int, int]:
         return (self.time, self.round_produced, self.slot)
@@ -197,6 +303,9 @@ class EventQueue:
         heapq.heappush(self._heap, (ev.key(), ev))
 
     def pop(self) -> Event:
+        if not self._heap:
+            raise ValueError("pop from empty event queue — no client upload "
+                             "is in flight (empty or all-unavailable cohort?)")
         return heapq.heappop(self._heap)[1]
 
     def peek_time(self) -> float | None:
@@ -215,5 +324,122 @@ class EventQueue:
 
     def load_state(self, events: list[Event]) -> None:
         self._heap = []
+        for ev in events:
+            self.push(ev)
+
+
+class BucketedEventQueue:
+    """Time-bucketed future-event list: same pop order as ``EventQueue``,
+    O(active-bucket) pops instead of O(log n) heap churn at 10^5+ events.
+
+    Events land in fixed-width time buckets (``bucket_s`` virtual seconds).
+    Only the *active* bucket — the one currently being drained — is ever
+    sorted (by ``Event.key()``, so tied timestamps fall back to
+    ``(round, slot)`` exactly like the heap); other buckets are unsorted
+    append-only lists, and a small heap of bucket ids orders the buckets
+    themselves.  Bucket width only affects performance, never pop order:
+    times in bucket ``b`` are strictly below times in bucket ``b+1``, and
+    within a bucket the full ``key()`` ordering applies.  The structure is
+    checkpointable via the same ``state()/load_state()`` contract as
+    ``EventQueue`` (pinned equivalent in ``tests/test_population.py``).
+    """
+
+    def __init__(self, bucket_s: float = 1.0):
+        if not (bucket_s > 0 and math.isfinite(bucket_s)):
+            raise ValueError(f"bucket_s must be positive, got {bucket_s}")
+        self.bucket_s = float(bucket_s)
+        self._buckets: dict[int, list[Event]] = {}   # unsorted pending
+        self._order: list[int] = []                  # heap of bucket ids
+        self._active: int | None = None
+        self._sorted: list[Event] = []               # active, key-sorted
+        self._keys: list[tuple] = []                 # parallel keys (bisect)
+        self._pos = 0
+        self._n = 0
+
+    def _bucket(self, t: float) -> int:
+        if not math.isfinite(t):
+            raise ValueError(f"event time must be finite, got {t}")
+        return math.floor(t / self.bucket_s)
+
+    def push(self, ev: Event) -> None:
+        b = self._bucket(ev.time)
+        self._n += 1
+        if b == self._active:
+            # insertion into the bucket being drained: keep it sorted so the
+            # next pop still returns the globally minimal key
+            i = bisect.bisect_left(self._keys, ev.key(), lo=self._pos)
+            self._keys.insert(i, ev.key())
+            self._sorted.insert(i, ev)
+            return
+        lst = self._buckets.get(b)
+        if lst is None:
+            self._buckets[b] = [ev]
+            heapq.heappush(self._order, b)
+        else:
+            lst.append(ev)
+
+    def push_batch(self, events: Iterable[Event]) -> None:
+        for ev in events:
+            self.push(ev)
+
+    def _min_pending_bucket(self) -> int | None:
+        while self._order and not self._buckets.get(self._order[0]):
+            heapq.heappop(self._order)    # emptied by load_state/activation
+        return self._order[0] if self._order else None
+
+    def _ensure_active(self) -> bool:
+        """Make the active bucket hold the globally minimal pending key;
+        False when the queue is empty."""
+        b = self._min_pending_bucket()
+        active_rem = self._pos < len(self._sorted)
+        if b is None:
+            return active_rem
+        if active_rem and self._active is not None and self._active <= b:
+            return True
+        if active_rem:
+            # an out-of-order push created an earlier bucket: park the
+            # remainder of the current active bucket and switch down
+            self._buckets[self._active] = self._sorted[self._pos:]
+            heapq.heappush(self._order, self._active)
+        heapq.heappop(self._order)
+        lst = self._buckets.pop(b)
+        lst.sort(key=Event.key)
+        self._active, self._sorted, self._pos = b, lst, 0
+        self._keys = [ev.key() for ev in lst]
+        return True
+
+    def pop(self) -> Event:
+        if not self._ensure_active():
+            raise ValueError("pop from empty event queue — no client upload "
+                             "is in flight (empty or all-unavailable cohort?)")
+        ev = self._sorted[self._pos]
+        self._pos += 1
+        self._n -= 1
+        if self._pos == len(self._sorted):   # drained: free, keep bucket id
+            self._sorted, self._keys, self._pos = [], [], 0
+        return ev
+
+    def peek_time(self) -> float | None:
+        if not self._ensure_active():
+            return None
+        return self._sorted[self._pos].time
+
+    def __len__(self) -> int:
+        return self._n
+
+    def events(self) -> list[Event]:
+        """Queue contents in pop order (non-destructive)."""
+        pending = self._sorted[self._pos:]
+        for lst in self._buckets.values():
+            pending.extend(lst)
+        return sorted(pending, key=Event.key)
+
+    def state(self) -> list[Event]:
+        return self.events()
+
+    def load_state(self, events: list[Event]) -> None:
+        self._buckets, self._order = {}, []
+        self._active, self._sorted, self._keys, self._pos = None, [], [], 0
+        self._n = 0
         for ev in events:
             self.push(ev)

@@ -61,10 +61,10 @@ def micro_cfg(name: str = "gpt2s-federated"):
         attn_chunk=32, loss_chunk=32)
 
 
-def micro_dataset(cfg, seed: int = 0):
+def micro_dataset(cfg, seed: int = 0, n_clients: int = 64):
     from repro.data import synthetic
     return synthetic.ClassShardLM(vocab=cfg.vocab, seq_len=16, n_classes=4,
-                                  n_clients=64, samples_per_client=4,
+                                  n_clients=n_clients, samples_per_client=4,
                                   seed=seed)
 
 
@@ -221,6 +221,8 @@ def main(argv=None):
             --aggregate tree --rounds 5
         PYTHONPATH=src python -m repro.launch.simulate \
             --clock event --aggregate async --rounds 5 --bw-sigma 2.0
+        PYTHONPATH=src python -m repro.launch.simulate \
+            --clock event --population 100000 --rounds 3
     """
     import argparse
 
@@ -231,7 +233,14 @@ def main(argv=None):
     ap.add_argument("--aggregate", default="flat",
                     choices=("flat", "tree", "async"))
     ap.add_argument("--rounds", type=int, default=5)
-    ap.add_argument("--clients-per-round", type=int, default=4)
+    ap.add_argument("--clients-per-round", type=int, default=None,
+                    help="cohort size (default 4; with --population, "
+                         "max(4, population // 100))")
+    ap.add_argument("--population", type=int, default=None,
+                    help="event clock only: total client population; "
+                         "switches on the vectorized dispatch path "
+                         "(lazy events + bucketed queue) so 10^4-10^6 "
+                         "clients simulate with O(sketch) server memory")
     ap.add_argument("--min-clients-per-round", type=int, default=None)
     ap.add_argument("--tree-fanout", type=int, default=2)
     ap.add_argument("--dropout-prob", type=float, default=0.0)
@@ -273,8 +282,19 @@ def main(argv=None):
                          "(0 = never; only active with --metrics)")
     args = ap.parse_args(argv)
 
+    if args.population is not None:
+        if args.population < 1:
+            ap.error(f"--population must be >= 1, got {args.population}")
+        if args.clock != "event":
+            ap.error("--population requires --clock event (the vectorized "
+                     "dispatch path only exists for the event clock)")
+    if args.clients_per_round is None:
+        args.clients_per_round = (max(4, args.population // 100)
+                                  if args.population is not None else 4)
+
     cfg = micro_cfg()
-    dataset = micro_dataset(cfg, seed=args.seed)
+    dataset = micro_dataset(cfg, seed=args.seed,
+                            n_clients=args.population or 64)
     telemetry = obs.from_args(args, run="simulate", method=args.method,
                               aggregate=args.aggregate, clock=args.clock,
                               seed=args.seed)
@@ -304,7 +324,8 @@ def main(argv=None):
                                      max_delay=args.max_delay),
         clock=args.clock, simtime=simtime, weight_by=args.weight_by,
         seed=args.seed, checkpoint_dir=args.checkpoint_dir,
-        checkpoint_every=args.checkpoint_every)
+        checkpoint_every=args.checkpoint_every,
+        vectorized=args.population is not None)
     try:
         res = run_simulation(cfg, method=args.method, rounds=args.rounds,
                              clients_per_round=args.clients_per_round,

@@ -350,6 +350,46 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
     return StepBundle(fn=fn, inputs=inputs, layout=layout)
 
 
+# -- vectorized federated cohort step --------------------------------------------
+
+def make_cohort_fn(cfg: ArchConfig, layout, fs_cfg: F.FetchSGDConfig,
+                   encode_fn=None):
+    """One jitted call for a whole chunk of federated clients.
+
+    Returns ``fn(params, tokens (B, ...), labels (B, ...)) -> (losses (B,),
+    tables (B, rows, cols))`` — ``lax.map`` over the stacked client batches
+    of exactly the per-client computation the event loop's scalar path
+    runs: ``value_and_grad(loss_fn(remat=False))`` followed by the sketch
+    encode.  ``lax.map`` applies the body per element with no cross-element
+    reduction, so each client's (loss, table) is **bitwise identical** to a
+    standalone jitted call — which is what lets ``fed.orchestrator``
+    materialize lazy events in chunks without perturbing the per-object
+    path's RoundRecord/checkpoint bytes (pinned in
+    ``tests/test_population.py``).
+
+    ``encode_fn`` must be the *same* (un-jitted) grads->table closure the
+    caller uses for single-event materialization — the orchestrator passes
+    its own so the chunked and scalar paths can never diverge; defaults to
+    the reference ``F.sketch_grads``.
+    """
+    if encode_fn is None:
+        def encode_fn(g):
+            return F.sketch_grads(g, layout, fs_cfg)
+
+    @jax.jit
+    def cohort_fn(params, tokens, labels):
+        def one(tl):
+            t, l = tl
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: transformer.loss_fn(
+                    p, {"tokens": t, "labels": l}, cfg, remat=False),
+                has_aux=True)(params)
+            return loss, encode_fn(grads)
+        return jax.lax.map(one, (tokens, labels))
+
+    return cohort_fn
+
+
 # -- serve steps -----------------------------------------------------------------
 
 def make_prefill_step(cfg: ArchConfig, shape: ShapeSpec, mesh,

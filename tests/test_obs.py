@@ -259,9 +259,11 @@ def micro():
     return cfg, simulate.micro_dataset(cfg)
 
 
-def _run(micro, *, telemetry=None, health_every=0, **fed_kw):
+def _run(micro, *, telemetry=None, health_every=0, dataset=None,
+         **fed_kw):
     from repro.launch import simulate
     cfg, ds = micro
+    ds = dataset if dataset is not None else ds
     fed_kw.setdefault("rounds", 3)
     fed_kw.setdefault("clients_per_round", 2)
     return simulate.run_simulation(
@@ -433,3 +435,51 @@ class TestFromArgs:
         assert obs.validate_events(events) == []
         assert events[0]["type"] == "meta"
         assert events[0]["run"] == "test"
+
+
+# ------------------------------------------------- population-scale path
+
+class TestPopulationPath:
+    """The vectorized 10^4+-client event loop speaks the same telemetry
+    schema as the per-object path — no new event types, the existing JSONL
+    gate passes, and the population size is visible as a gauge."""
+
+    @pytest.fixture(scope="class")
+    def pop_run(self, micro):
+        from repro.launch import simulate
+        cfg, _ = micro
+        ds = simulate.micro_dataset(cfg, n_clients=10_000)
+        sink = obs.MemorySink()
+        tele = obs.Telemetry([sink], trace=True)
+        res = _run(micro, telemetry=tele, health_every=1, aggregate="async",
+                   rounds=3, clients_per_round=16, clock="event",
+                   vectorized=True, seed=3,
+                   simtime=fed.SimTimeConfig(
+                       heterogeneity=fed.HeterogeneityConfig(
+                           bandwidth_sigma=1.5)),
+                   dataset=ds)
+        tele.close()
+        return res, sink.events
+
+    def test_round_events_follow_existing_schema(self, pop_run):
+        res, events = pop_run
+        assert obs.validate_events(events) == []
+        rounds = [e for e in events if e["type"] == "round"]
+        assert len(rounds) == 3
+        for ev, rec in zip(rounds, res.extras["fed_records"]):
+            assert ev["round"] == rec.round_idx
+            assert ev["population_size"] == 10_000
+
+    def test_population_size_gauge(self, pop_run):
+        _, events = pop_run
+        snap = [e for e in events if e["type"] == "metrics"][-1]
+        assert snap["gauges"]["fed.population_size"] == 10_000
+
+    def test_jsonl_gate_passes_on_10k_run(self, micro, tmp_path):
+        from repro.launch import simulate
+        from repro.obs import schema
+        path = str(tmp_path / "pop.jsonl")
+        simulate.main(["--clock", "event", "--population", "10000",
+                       "--rounds", "2", "--clients-per-round", "8",
+                       "--metrics", path])
+        assert schema.main([path]) == 0

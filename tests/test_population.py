@@ -1,0 +1,421 @@
+"""Population-scale vectorized federation: equivalence + property tests.
+
+The vectorized event path (``FederationConfig(vectorized=True)``) must be
+*indistinguishable* from the per-object path at any scale where both run:
+
+* ``BucketedEventQueue`` pops the same sequence as the heap ``EventQueue``
+  — including tied timestamps, which fall back to ``Event.key()``'s
+  ``(time, round, slot)`` — under randomized interleaved push/pop
+  schedules and arbitrary bucket widths (seeded property sweeps; the
+  container has no ``hypothesis``, so the strategies are explicit rngs);
+* ``PopulationModel.profile(i)`` equals ``HeterogeneityModel.profile(i)``
+  field-for-field (same per-client rng stream);
+* small-population runs produce byte-identical RoundRecord streams and
+  checkpoint files in both modes, for every aggregation policy;
+* checkpoints written mid-run by the bucketed queue resume byte-identically,
+  and legacy per-event-layout checkpoints still load (migration shim);
+* degenerate configurations fail with actionable ``ValueError``s instead
+  of an empty-heap pop deep in the event loop.
+"""
+
+import dataclasses
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import fed
+from repro.core import fetchsgd as F
+from repro.core import gather_sketch
+from repro.core import layout as layout_lib
+from repro.fed import checkpoint as ckpt_lib
+from repro.fed.simtime import (BucketedEventQueue, Event, EventQueue,
+                               HeterogeneityConfig, HeterogeneityModel,
+                               PopulationModel)
+from repro.launch import simulate
+from repro.models import transformer
+from repro.optim import triangular
+
+SKEWED = HeterogeneityConfig(compute_median=1.0, compute_sigma=0.5,
+                             bandwidth_median=1e5, bandwidth_sigma=2.0)
+WINDOWED = HeterogeneityConfig(compute_median=1.0, compute_sigma=0.5,
+                               bandwidth_median=1e5, bandwidth_sigma=2.0,
+                               avail_period=50.0, avail_duty_min=0.4,
+                               avail_duty_max=0.9)
+CFG = F.FetchSGDConfig(rows=3, cols=1 << 10, k=64)
+
+
+def _mk_event(t, r=0, slot=0, client=0):
+    return Event(time=float(t), round_produced=r, slot=slot, client=client,
+                 produced=0.0, weight=1.0, loss=None, table=None)
+
+
+# ---------------------------------------------------------------- queues
+
+
+def _random_schedule(rng, n_ops):
+    """(op, payload) stream: pushes (sometimes out-of-order / tied) and
+    pops, as a property-test strategy."""
+    ops, t_hi, slot = [], 0.0, 0
+    for _ in range(n_ops):
+        u = rng.random()
+        if u < 0.55:
+            if rng.random() < 0.25 and ops:
+                t = rng.uniform(0.0, t_hi)          # out-of-order (past)
+            else:
+                t = t_hi + rng.exponential(2.0)
+                t_hi = t
+            if rng.random() < 0.3:
+                t = math.floor(t)                   # force cross-push ties
+            ops.append(("push", _mk_event(t, r=int(rng.integers(0, 4)),
+                                          slot=slot)))
+            slot += 1
+        else:
+            ops.append(("pop", None))
+    return ops
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("bucket_s", [0.1, 1.0, 3.7, 100.0])
+def test_bucketed_queue_matches_heap(seed, bucket_s):
+    rng = np.random.default_rng(seed)
+    heap, bucketed = EventQueue(), BucketedEventQueue(bucket_s=bucket_s)
+    for op, ev in _random_schedule(rng, 120):
+        if op == "push":
+            heap.push(ev)
+            bucketed.push(ev)
+        elif len(heap):
+            assert bucketed.pop() is heap.pop()
+        else:
+            with pytest.raises(ValueError, match="empty event queue"):
+                bucketed.pop()
+        assert len(bucketed) == len(heap)
+        assert bucketed.peek_time() == heap.peek_time()
+    while len(heap):
+        assert bucketed.pop() is heap.pop()
+    assert len(bucketed) == 0
+
+
+def test_bucketed_queue_tied_timestamps_pop_in_key_order():
+    # same arrival second: (time, round, slot) decides, exactly like the heap
+    evs = [_mk_event(5.0, r=1, slot=2), _mk_event(5.0, r=0, slot=7),
+           _mk_event(5.0, r=0, slot=3), _mk_event(5.0, r=1, slot=0)]
+    q = BucketedEventQueue(bucket_s=10.0)
+    q.push_batch(evs)
+    keys = [q.pop().key() for _ in range(len(evs))]
+    assert keys == sorted(ev.key() for ev in evs)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_bucketed_queue_state_roundtrip_mid_drain(seed):
+    rng = np.random.default_rng(100 + seed)
+    q = BucketedEventQueue(bucket_s=2.0)
+    evs = [_mk_event(rng.uniform(0, 40), slot=i) for i in range(60)]
+    q.push_batch(evs)
+    for _ in range(17):
+        q.pop()
+    saved = q.state()
+    q2 = BucketedEventQueue(bucket_s=2.0)
+    q2.load_state(saved)
+    assert [q2.pop().key() for _ in range(len(q2))] \
+        == [q.pop().key() for _ in range(len(q))]
+
+
+def test_bucketed_queue_rejects_bad_config():
+    with pytest.raises(ValueError, match="bucket_s"):
+        BucketedEventQueue(bucket_s=0.0)
+    with pytest.raises(ValueError, match="finite"):
+        BucketedEventQueue(bucket_s=1.0).push(_mk_event(float("inf")))
+
+
+def test_empty_queue_pop_raises_actionable_error():
+    for q in (EventQueue(), BucketedEventQueue()):
+        with pytest.raises(ValueError, match="no client upload"):
+            q.pop()
+
+
+# ------------------------------------------------------------ population
+
+
+@pytest.mark.parametrize("het", [SKEWED, WINDOWED],
+                         ids=["skewed", "windowed"])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_population_profile_matches_scalar_model(het, seed):
+    pop = PopulationModel(het, seed=seed, block=16)   # small: cross blocks
+    scalar = HeterogeneityModel(het, seed=seed)
+    ids = [0, 1, 15, 16, 17, 255, 4096, 12345]
+    for i in ids:
+        assert dataclasses.asdict(pop.profile(i)) \
+            == dataclasses.asdict(scalar.profile(i)), f"client {i}"
+    # batched columns agree with the scalar fields too
+    cols = pop.columns(np.asarray(ids))
+    for j, i in enumerate(ids):
+        p = scalar.profile(i)
+        assert cols["compute"][j] == p.compute_seconds
+        assert cols["bandwidth"][j] == p.bandwidth
+        assert cols["weight"][j] == p.weight
+        assert cols["duty"][j] == p.avail_duty
+        assert cols["offset"][j] == p.avail_offset
+
+
+def test_population_time_math_matches_scalar_profile():
+    pop = PopulationModel(WINDOWED, seed=1)
+    scalar = HeterogeneityModel(WINDOWED, seed=1)
+    ids = np.arange(32)
+    cols = pop.columns(ids)
+    for t in (0.0, 13.7, 49.9, 1234.5):
+        nxt = pop.next_available(cols, t)
+        fin = pop.finish_times(cols, t, table_bytes=12288, compute_scale=1.0)
+        for j, i in enumerate(ids):
+            p = scalar.profile(int(i))
+            start = p.next_available(t)
+            assert nxt[j] == start
+            assert fin[j] == start + p.compute_seconds + 12288 / p.bandwidth
+
+
+def test_population_rejects_negative_ids():
+    with pytest.raises(ValueError, match=">= 0"):
+        PopulationModel(SKEWED).columns(np.asarray([3, -1]))
+
+
+# --------------------------------------------------------- gather sketch
+
+
+def _micro_layout():
+    cfg = simulate.micro_cfg()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    return params, layout_lib.build_layout(params)
+
+
+@pytest.mark.parametrize("fs", [F.FetchSGDConfig(rows=3, cols=1 << 10, k=64),
+                                F.FetchSGDConfig(rows=5, cols=1000, k=64)],
+                         ids=["pow2", "non-pow2"])
+def test_gather_encode_exact_on_integer_grads(fs):
+    # integer-valued float32 grads: every bucket sum is exact regardless of
+    # association, so the gather plan must match the scatter encoder
+    # bit-for-bit — this pins bucket indices and signs, not just values
+    params, lay = _micro_layout()
+    enc = gather_sketch.build_encoder(lay, fs)
+    if enc is None:
+        pytest.skip("layout not servable by gather plans")
+    rng = np.random.default_rng(0)
+    g = jax.tree.map(lambda p: jnp.asarray(
+        rng.integers(-8, 9, size=p.shape), jnp.float32), params)
+    a, b = jax.jit(enc)(g), F.sketch_grads(g, lay, fs)
+    assert a.shape == (fs.rows, fs.cols)
+    assert bool(jnp.all(a == b))
+
+
+def test_gather_encode_close_on_real_grads():
+    # real-valued grads only differ from the scatter encoder by summation
+    # association inside a bucket: last-ulp noise, never structure
+    params, lay = _micro_layout()
+    enc = gather_sketch.build_encoder(lay, CFG)
+    if enc is None:
+        pytest.skip("layout not servable by gather plans")
+    rng = np.random.default_rng(1)
+    g = jax.tree.map(lambda p: jnp.asarray(
+        rng.standard_normal(p.shape), jnp.float32), params)
+    a, b = jax.jit(enc)(g), F.sketch_grads(g, lay, CFG)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- streaming aggregation
+
+
+@pytest.mark.parametrize("policy,kw", [("flat", {}), ("tree", {"fanout": 2}),
+                                       ("tree", {"fanout": 3}),
+                                       ("tree", {"fanout": 4})])
+@pytest.mark.parametrize("n", [0, 1, 5, 16, 37])
+def test_aggregate_stream_bitwise_matches_batch(policy, kw, n):
+    fs = F.FetchSGDConfig(rows=3, cols=256, k=16)
+    agg = fed.make_aggregator(policy, fs, **kw)
+    rng = np.random.default_rng(n)
+    tables = [jnp.asarray(rng.standard_normal((3, 256)), jnp.float32)
+              for _ in range(n)]
+    weights = rng.uniform(0.5, 2.0, size=n).tolist()
+    batch_t, batch_s = agg.aggregate(tables, weights=weights)
+    stream_t, stream_s = agg.aggregate_stream(zip(tables, weights))
+    assert bool(jnp.all(batch_t == stream_t))
+    assert batch_s.n_fresh == stream_s.n_fresh
+    assert batch_s.total_weight == stream_s.total_weight
+
+
+def test_async_timed_stream_bitwise_matches_submit_then_drain():
+    fs = F.FetchSGDConfig(rows=3, cols=256, k=16)
+    rng = np.random.default_rng(7)
+    arrivals = [(jnp.asarray(rng.standard_normal((3, 256)), jnp.float32),
+                 float(p), float(p) + float(rng.uniform(0.5, 30.0)),
+                 float(rng.uniform(0.5, 2.0)))
+                for p in rng.uniform(0.0, 20.0, size=12)]
+    now = 25.0
+
+    a = fed.make_aggregator("async", fs, staleness_lambda=0.05, max_age=20.0)
+    for t, p, arr, w in arrivals:
+        a.submit(t, produced_round=p, arrival_round=arr, weight=w)
+    batch_t, batch_s = a.aggregate([], round_idx=now)
+
+    b = fed.make_aggregator("async", fs, staleness_lambda=0.05, max_age=20.0)
+    stream_t, stream_s = b.merge_timed_stream(iter(arrivals), now=now)
+    assert bool(jnp.all(batch_t == stream_t))
+    assert batch_s.n_late == stream_s.n_late
+    assert batch_s.total_weight == stream_s.total_weight
+    assert [e["arrival"] for e in a.state()] \
+        == [e["arrival"] for e in b.state()]
+
+
+# ------------------------------------------- orchestrator path identity
+
+
+@pytest.fixture(scope="module")
+def micro():
+    cfg = simulate.micro_cfg()
+    return cfg, simulate.micro_dataset(cfg)
+
+
+def _orch(micro, vectorized, aggregate, *, rounds=3, population=None,
+          ckdir=None, every=0, total_rounds=None, het=SKEWED, seed=0):
+    cfg, ds = micro
+    if population is not None:
+        ds = simulate.micro_dataset(cfg, n_clients=population)
+    fed_cfg = fed.FederationConfig(
+        rounds=rounds, clients_per_round=6, aggregate=aggregate,
+        clock="event", vectorized=vectorized, seed=seed,
+        simtime=fed.SimTimeConfig(
+            heterogeneity=het,
+            quorum=3 if aggregate == "async" else None),
+        straggler=fed.StragglerModel(dropout_prob=0.15, straggle_prob=0.25,
+                                     max_delay=2),
+        checkpoint_dir=ckdir, checkpoint_every=every)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    return fed.Orchestrator(cfg, CFG, fed_cfg, ds, params=params,
+                            lr_fn=triangular(0.2, total_rounds or rounds))
+
+
+@pytest.mark.parametrize("aggregate", ["flat", "tree", "async"])
+def test_vectorized_round_records_byte_identical(micro, aggregate):
+    ref = _orch(micro, False, aggregate, het=WINDOWED).run()
+    vec = _orch(micro, True, aggregate, het=WINDOWED).run()
+    assert [dataclasses.asdict(r) for r in ref.records] \
+        == [dataclasses.asdict(r) for r in vec.records]
+    assert ref.losses == vec.losses
+    assert ref.traffic == vec.traffic
+
+
+def test_vectorized_checkpoints_content_identical(micro, tmp_path):
+    d1, d2 = str(tmp_path / "obj"), str(tmp_path / "vec")
+    _orch(micro, False, "flat", rounds=4, ckdir=d1, every=2).run()
+    _orch(micro, True, "flat", rounds=4, ckdir=d2, every=2).run()
+    names = sorted(os.listdir(d1))
+    assert names == sorted(os.listdir(d2)) and names
+    for name in names:
+        p1, p2 = os.path.join(d1, name), os.path.join(d2, name)
+        if name.endswith(".json"):
+            with open(p1) as f1, open(p2) as f2:
+                assert json.load(f1) == json.load(f2), name
+        else:
+            with np.load(p1) as a, np.load(p2) as b:
+                assert sorted(a.files) == sorted(b.files), name
+                for k in a.files:
+                    assert np.array_equal(a[k], b[k]), (name, k)
+
+
+def test_vectorized_1k_client_resume_byte_identical(micro, tmp_path):
+    # mid-run save/restore with the bucketed queue at a 1k population:
+    # the resumed run's remaining rounds must equal the uninterrupted run's
+    full = _orch(micro, True, "async", rounds=4, population=1000,
+                 total_rounds=4).run()
+    d = str(tmp_path / "ck")
+    _orch(micro, True, "async", rounds=2, population=1000, ckdir=d,
+          every=1, total_rounds=4).run()
+    resumed = _orch(micro, True, "async", rounds=4, population=1000,
+                    ckdir=d, every=1, total_rounds=4).run()
+    tail = [dataclasses.asdict(r) for r in full.records][2:]
+    assert tail == [dataclasses.asdict(r) for r in resumed.records]
+
+
+def test_legacy_per_event_checkpoint_migrates(micro, tmp_path):
+    # the pre-columnar format wrote one ``event_%05d`` npz member per
+    # in-flight event + kwargs in the sidecar; restore() must still load it
+    cfg, _ = micro
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    state = F.init_state(CFG)
+    d = str(tmp_path)
+    path = ckpt_lib.save(d, params, state, 3)
+    metas = [dict(time=4.5, round_produced=1, slot=0, client=9,
+                  produced=2.0, weight=1.5, loss=0.25),
+             dict(time=6.0, round_produced=2, slot=1, client=4,
+                  produced=3.0, weight=1.0, loss=0.5)]
+    rng = np.random.default_rng(0)
+    tables = [rng.standard_normal((CFG.rows, CFG.cols)).astype(np.float32)
+              for _ in metas]
+    with np.load(path) as data:
+        arrays = {k: data[k] for k in data.files}
+    for i, t in enumerate(tables):
+        arrays[f"event_{i:05d}"] = t
+    np.savez(path, **arrays)
+    meta_path = path[:-len(".npz")] + ".json"
+    with open(meta_path) as f:
+        info = json.load(f)
+    info["simtime"] = {"now": 4.0, "events": metas}   # legacy: no n_events
+    with open(meta_path, "w") as f:
+        json.dump(info, f)
+
+    ck = ckpt_lib.restore(d, params, state)
+    assert ck.simtime["now"] == 4.0
+    for ev, m, t in zip(ck.simtime["events"], metas, tables):
+        assert ev.meta() == m
+        assert np.array_equal(np.asarray(ev.table), t)
+
+
+def test_checkpoint_rejects_lazy_events(micro, tmp_path):
+    cfg, _ = micro
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="lazy event"):
+        ckpt_lib.save(str(tmp_path), params, F.init_state(CFG), 0,
+                      simtime={"now": 1.0, "events": [_mk_event(2.0)]})
+
+
+# ----------------------------------------------------------- degenerate
+
+
+def test_cohort_larger_than_population_raises(micro):
+    with pytest.raises(ValueError, match="exceeds the population"):
+        _orch(micro, True, "flat", population=4)
+
+
+def test_empty_population_raises(micro):
+    with pytest.raises(ValueError, match="empty population"):
+        _orch(micro, True, "flat", population=0)
+
+
+def test_vectorized_requires_event_clock():
+    with pytest.raises(ValueError, match="vectorized"):
+        fed.FederationConfig(rounds=2, clients_per_round=4,
+                             vectorized=True, clock="round")
+
+
+# -------------------------------------------------------------- metrics
+
+
+def test_histogram_observe_many_matches_sequential():
+    from repro.obs.metrics import Histogram
+    rng = np.random.default_rng(0)
+    vals = rng.lognormal(0.0, 3.0, size=500)
+    a, b = Histogram(), Histogram()
+    for v in vals:
+        a.observe(float(v))
+    b.observe_many(vals)
+    b.observe_many([])          # no-op
+    sa, sb = a.snapshot(), b.snapshot()
+    # numpy's pairwise sum vs the sequential += differ at last-ulp; every
+    # structural field (bucket counts, count, min/max, quantiles) is exact
+    assert sb["sum"] == pytest.approx(sa["sum"], rel=1e-12)
+    del sa["sum"], sb["sum"]
+    assert sa == sb
