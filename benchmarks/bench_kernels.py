@@ -1,25 +1,52 @@
 """Count-sketch kernel micro-benchmarks (the paper's compute hot-spot).
 
-Times the XLA scatter path on CPU (the runtime here) and runs the Pallas
-MXU path in interpret mode for validation-only timing.  On the TPU target
-the Pallas path is the production encode; CPU numbers are reference
-points, not TPU projections.  Derived: throughput in M elements/s.
+Times the sketch ops — encode, estimate, and the fused server step
+(momentum + error + top-k estimate + hit-mask, ``repro.core.fetchsgd.
+server_step``) — for each requested implementation:
+
+* ``jnp``               — XLA scatter/gather, jit-compiled (every backend);
+* ``pallas``            — compiled Pallas MXU kernels (TPU/GPU).  On a
+                          backend that cannot compile Pallas the rows are
+                          still emitted, marked ``mode=unavailable`` with
+                          ``us_per_call=-1`` — the trajectory records the
+                          hole loudly instead of silently dropping it;
+* ``pallas-interpret``  — the Pallas kernels through the interpreter.
+                          Validation-only (~27x slower than XLA on CPU),
+                          so it is **never** timed by default: request it
+                          explicitly with ``--impl pallas-interpret``.
+
+Every row carries a ``mode`` (compiled / interpret / unavailable) so the
+``BENCH_kernels.json`` trajectory can tell a CPU-XLA point from a
+TPU-compiled point from an interpreter validation run.
+
+    python -m benchmarks.bench_kernels                    # default impls
+    python -m benchmarks.bench_kernels --impl jnp --impl pallas-interpret
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro.kernels import ops
+
+ROWS = 5
+COLS = 1 << 16
+K = 1000
+NS = (1 << 16, 1 << 20)
+DEFAULT_IMPLS = ("jnp", "pallas")
+# interpret mode at n=2^20 takes minutes; cap explicitly-requested
+# interpreter runs at the small shape and say so in the emitted rows
+_INTERPRET_MAX_N = 1 << 16
 
 
 def _time(fn, *args, iters=10):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))          # compile + warm
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)
@@ -27,26 +54,78 @@ def _time(fn, *args, iters=10):
     return (time.time() - t0) / iters * 1e6
 
 
-def run() -> list[tuple[str, float, str]]:
+def _mode(impl: str) -> str:
+    return "interpret" if impl == "pallas-interpret" else "compiled"
+
+
+def _server_step_fn(n: int, impl: str):
+    from repro.core import fetchsgd as F
+    from repro.core import layout as layout_lib
+    cfg = F.FetchSGDConfig(rows=ROWS, cols=COLS, k=min(K, n), impl=impl)
+    lay = layout_lib.build_layout({"w": jnp.zeros((n,), jnp.float32)})
+    state = F.init_state(cfg)
+
+    @jax.jit
+    def step(agg, st):
+        return F.server_step(agg, st, jnp.float32(0.02), lay, cfg)
+
+    return step, state
+
+
+def _impl_rows(impl: str, ns, rng) -> list[tuple[str, float, str, str]]:
+    if impl == "pallas" and not ops.pallas_compile_supported():
+        reason = (f"unavailable:no_compiled_pallas_on_"
+                  f"{jax.default_backend()}_backend")
+        return [(f"{op}_{impl}_n{n}", -1.0, reason, "unavailable")
+                for n in ns
+                for op in ("kernel_encode", "kernel_estimate",
+                           "server_step_fused")]
+    out = []
+    mode = _mode(impl)
+    for n in ns:
+        if impl == "pallas-interpret" and n > _INTERPRET_MAX_N:
+            print(f"# skipping n={n} for pallas-interpret "
+                  f"(validation-only; capped at n={_INTERPRET_MAX_N})",
+                  file=sys.stderr)
+            continue
+        iters = 1 if mode == "interpret" else (3 if n > (1 << 17) else 10)
+        v = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        enc = jax.jit(lambda x: ops.sketch_encode(x, 0, ROWS, COLS,
+                                                  impl=impl))
+        us = _time(enc, v, iters=iters)
+        out.append((f"kernel_encode_{impl}_n{n}", us,
+                    f"{n / us:.1f}Melem_per_s", mode))
+        tbl = enc(v)
+        est = jax.jit(lambda t: ops.sketch_estimate(t, 0, n, impl=impl))
+        us = _time(est, tbl, iters=iters)
+        out.append((f"kernel_estimate_{impl}_n{n}", us,
+                    f"{n / us:.1f}Melem_per_s", mode))
+        step, state = _server_step_fn(n, impl)
+        us = _time(step, tbl, state, iters=max(1, iters // 2))
+        out.append((f"server_step_fused_{impl}_n{n}", us,
+                    f"{n / us:.1f}Melem_per_s", mode))
+    return out
+
+
+def run(impls=None, ns=NS) -> list[tuple[str, float, str, str]]:
     rng = np.random.default_rng(0)
     out = []
-    for n in (1 << 16, 1 << 20):
-        v = jnp.asarray(rng.normal(size=n).astype(np.float32))
-        enc = jax.jit(lambda x: ops.sketch_encode(x, 0, 5, 1 << 16,
-                                                  impl="xla"))
-        us = _time(enc, v)
-        out.append((f"kernel_encode_xla_n{n}", us,
-                    f"{n / us:.1f}Melem_per_s"))
-        tbl = enc(v)
-        est = jax.jit(lambda t: ops.sketch_estimate(t, 0, n, impl="xla"))
-        us = _time(est, tbl)
-        out.append((f"kernel_estimate_xla_n{n}", us,
-                    f"{n / us:.1f}Melem_per_s"))
-    # Pallas interpret-mode single-shot (validation path; CPU emulation)
-    v = jnp.asarray(rng.normal(size=1 << 14).astype(np.float32))
-    t0 = time.time()
-    ops.sketch_encode(v, 0, 3, 4096, impl="pallas")
-    us = (time.time() - t0) * 1e6
-    out.append(("kernel_encode_pallas_interpret_n16384", us,
-                "interpret_mode_validation_only"))
+    for impl in (impls or DEFAULT_IMPLS):
+        out.extend(_impl_rows(ops.normalize_impl(impl), ns, rng))
     return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--impl", action="append", default=None,
+                    choices=("jnp", "pallas", "pallas-interpret", "xla"),
+                    help="impl(s) to time (repeatable; default: jnp + "
+                         "pallas — the interpreter only runs when asked)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived,mode")
+    for name, us, derived, mode in run(impls=args.impl):
+        print(f"{name},{us:.1f},{derived},{mode}")
+
+
+if __name__ == "__main__":
+    main()

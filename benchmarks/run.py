@@ -60,9 +60,13 @@ def main(argv=None) -> None:
     for label, mod in modules:
         try:
             rows = []
-            for name, us, derived in mod.run():
-                rows.append((name, us, derived))
-                print(f"{name},{us:.1f},{derived}")
+            for row in mod.run():
+                # (name, us, derived) or (name, us, derived, mode) — the
+                # kernels family tags rows compiled/interpret/unavailable
+                name, us, derived = row[:3]
+                rows.append(row)
+                mode = f",{row[3]}" if len(row) > 3 else ""
+                print(f"{name},{us:.1f},{derived}{mode}")
                 sys.stdout.flush()
             if args.json:
                 path = trajectory.write(label, rows, out_dir=args.out_dir)

@@ -44,23 +44,34 @@ def bench_path(name: str, out_dir: str = ".") -> str:
     return os.path.join(out_dir, f"BENCH_{sanitize(name)}.json")
 
 
-def write(name: str, rows: list[tuple[str, float, str]],
+def write(name: str, rows: list[tuple],
           out_dir: str = ".") -> str:
     """Persist one bench family's rows; returns the file path.
 
     ``rows`` are the harness's ``(name, us_per_call, derived)`` triples —
     exactly what each ``benchmarks.bench_*.run()`` yields, so the CSV on
-    stdout and the JSON on disk can never disagree.
+    stdout and the JSON on disk can never disagree.  A row may carry an
+    optional fourth element ``mode`` (the kernels family tags each point
+    ``compiled`` / ``interpret`` / ``unavailable`` so a trajectory can
+    distinguish an XLA-compiled point from an interpreter validation run
+    from a backend that cannot run the impl at all).
     """
     from repro.obs import env_fingerprint
+
+    def _result(row):
+        n, us, d = row[:3]
+        r = {"name": n, "us_per_call": float(us), "derived": str(d)}
+        if len(row) > 3:
+            r["mode"] = str(row[3])
+        return r
+
     payload = {
         "schema": SCHEMA_VERSION,
         "bench": name,
         "created_utc": datetime.datetime.now(datetime.timezone.utc)
                        .strftime("%Y-%m-%dT%H:%M:%SZ"),
         "env": env_fingerprint(),
-        "results": [{"name": n, "us_per_call": float(us), "derived": str(d)}
-                    for n, us, d in rows],
+        "results": [_result(row) for row in rows],
     }
     path = bench_path(name, out_dir)
     with open(path, "w") as f:
@@ -105,6 +116,9 @@ def compare(old: dict, new: dict) -> list[tuple[str, float, float, float]]:
     old_by = {r["name"]: r["us_per_call"] for r in old["results"]}
     out = []
     for r in new["results"]:
+        # us <= 0 marks an unavailable impl, not a measurement
+        if r["us_per_call"] <= 0:
+            continue
         if r["name"] in old_by and old_by[r["name"]] > 0:
             o = old_by[r["name"]]
             out.append((r["name"], o, r["us_per_call"],

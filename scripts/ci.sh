@@ -1,18 +1,22 @@
 #!/usr/bin/env bash
-# CI entry. Usage: scripts/ci.sh [tier1|tier2|all]   (from the repo root)
+# CI entry. Usage: scripts/ci.sh [tier1|tier2|kernels|all]   (repo root)
 #
-#   tier1 — the full test suite + one 3-round simulate smoke per policy
-#           + an instrumented observability smoke (JSONL schema-gated)
-#           + the kernels perf-trajectory family (BENCH_*.json artifact)
-#   tier2 — sketch-invariant property tests (hypothesis) + simtime +
-#           population-equivalence tests + a 20-event event-clock smoke
-#           (5 rounds x 4 clients) + a 10^4-client vectorized smoke
+#   tier1   — the full test suite + one 3-round simulate smoke per policy
+#             + an instrumented observability smoke (JSONL schema-gated)
+#             + the kernels perf-trajectory family (BENCH_*.json artifact)
+#   tier2   — sketch-invariant property tests (hypothesis) + simtime +
+#             population-equivalence tests + a 20-event event-clock smoke
+#             (5 rounds x 4 clients) + a 10^4-client vectorized smoke
+#   kernels — compiled-parity suite (Pallas edge-shape + fused server-step
+#             tests; compiled params skip cleanly on interpret-only
+#             backends) + the kernels bench with the impl-comparison
+#             roofline view (bench-out/BENCH_kernels.json artifact)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 TIER="${1:-all}"
 case "$TIER" in
-    tier1|tier2|all) ;;
-    *) echo "usage: scripts/ci.sh [tier1|tier2|all]" >&2; exit 1 ;;
+    tier1|tier2|kernels|all) ;;
+    *) echo "usage: scripts/ci.sh [tier1|tier2|kernels|all]" >&2; exit 1 ;;
 esac
 
 python -m pip install -q -r requirements-dev.txt || \
@@ -55,5 +59,16 @@ if [[ "$TIER" == "tier2" || "$TIER" == "all" ]]; then
     echo "== population-scale smoke (10^4 clients, vectorized dispatch)"
     python -m repro.launch.simulate --clock event --population 10000 \
         --clients-per-round 16 --rounds 2 --bw-sigma 2.0
+fi
+
+if [[ "$TIER" == "kernels" || "$TIER" == "all" ]]; then
+    echo "== kernels: compiled-parity suite"
+    # compiled-Pallas params skip (not fail) on backends that can only
+    # interpret Pallas; on TPU/GPU the same sweep pins compiled parity
+    python -m pytest -x -q tests/test_kernels.py tests/test_server_step.py
+    echo "== kernels perf trajectory (jnp + pallas impl comparison)"
+    mkdir -p bench-out
+    python -m benchmarks.run --json --only kernels --out-dir bench-out
+    python scripts/report_roofline.py --kernels bench-out/BENCH_kernels.json
 fi
 echo "CI OK ($TIER)"

@@ -1,9 +1,105 @@
-"""Render the §Roofline table from dryrun JSONL results."""
+"""Render the §Roofline table from dryrun JSONL results, and the kernels
+impl-comparison table from a ``BENCH_kernels.json`` trajectory file.
+
+    python scripts/report_roofline.py dryrun1.jsonl [dryrun2.jsonl ...]
+    python scripts/report_roofline.py --kernels BENCH_kernels.json
+    python scripts/report_roofline.py --kernels BENCH_kernels.json \
+        --require-impl pallas        # exit 2 unless compiled rows exist
+
+The kernels view pivots rows named ``<op>_<impl>_n<N>`` into one line per
+(op, N) with a jnp-vs-pallas speedup column.  An impl whose rows are
+marked ``mode=unavailable`` (or missing entirely) prints as ``--`` — and
+``--require-impl`` turns that hole into a hard failure instead of a
+silently thinner table.
+"""
+import argparse
 import json
 import sys
 
+KNOWN_IMPLS = ("jnp", "pallas", "pallas-interpret")
 
-def main(paths):
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", help="dryrun JSONL result files")
+    ap.add_argument("--kernels", default=None, metavar="BENCH_JSON",
+                    help="render the kernels impl table from a "
+                         "BENCH_kernels.json trajectory file")
+    ap.add_argument("--require-impl", action="append", default=[],
+                    choices=KNOWN_IMPLS,
+                    help="fail (exit 2) unless this impl has at least one "
+                         "measured (non-unavailable) kernels row")
+    args = ap.parse_args(argv)
+    if args.kernels:
+        kernels_table(args.kernels, require=args.require_impl)
+    if args.paths:
+        dryrun_table(args.paths)
+    if not args.kernels and not args.paths:
+        ap.error("nothing to do: pass dryrun JSONL paths or --kernels")
+
+
+def _parse_row_name(name: str):
+    """``kernel_encode_jnp_n65536`` -> (op, impl, n) or None."""
+    if "_n" not in name:
+        return None
+    base, _, n_str = name.rpartition("_n")
+    if not n_str.isdigit():
+        return None
+    for impl in sorted(KNOWN_IMPLS, key=len, reverse=True):
+        if base.endswith("_" + impl):
+            return base[:-len(impl) - 1], impl, int(n_str)
+    return None
+
+
+def kernels_table(path: str, require=()):
+    sys.path.insert(0, ".")
+    from benchmarks import trajectory
+    payload = trajectory.load(path)
+    cells = {}          # (op, n) -> {impl: result row}
+    measured = {impl: 0 for impl in KNOWN_IMPLS}
+    for r in payload["results"]:
+        parsed = _parse_row_name(r["name"])
+        if parsed is None:
+            continue
+        op, impl, n = parsed
+        cells.setdefault((op, n), {})[impl] = r
+        if r.get("mode") != "unavailable" and r["us_per_call"] > 0:
+            measured[impl] += 1
+
+    env = payload.get("env", {})
+    print(f"# kernels trajectory: {path} "
+          f"(backend={env.get('backend', '?')}, jax={env.get('jax', '?')})")
+    print("| op | n | jnp us | pallas us | interpret us | pallas/jnp |")
+    print("|---|---|---|---|---|---|")
+    for (op, n) in sorted(cells):
+        by = cells[(op, n)]
+
+        def fmt(impl):
+            r = by.get(impl)
+            if r is None:
+                return "--"
+            if r.get("mode") == "unavailable" or r["us_per_call"] <= 0:
+                return "unavailable"
+            return f"{r['us_per_call']:.0f}"
+
+        speed = "--"
+        jr, pr = by.get("jnp"), by.get("pallas")
+        if (jr and pr and jr["us_per_call"] > 0 and pr["us_per_call"] > 0
+                and pr.get("mode") != "unavailable"):
+            speed = f"{jr['us_per_call'] / pr['us_per_call']:.2f}x"
+        print(f"| {op} | {n} | {fmt('jnp')} | {fmt('pallas')} "
+              f"| {fmt('pallas-interpret')} | {speed} |")
+
+    missing = [impl for impl in require if not measured[impl]]
+    if missing:
+        print(f"ERROR: required impl(s) {missing} have no measured rows in "
+              f"{path} — the backend ({env.get('backend', '?')}) cannot run "
+              f"them, or the bench was invoked without them. Refusing to "
+              f"report a trajectory hole as success.", file=sys.stderr)
+        sys.exit(2)
+
+
+def dryrun_table(paths):
     rows = []
     for p in paths:
         with open(p) as f:
@@ -26,4 +122,4 @@ def main(paths):
 
 
 if __name__ == "__main__":
-    main(sys.argv[1:])
+    main()

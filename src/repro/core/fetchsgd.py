@@ -46,11 +46,14 @@ class FetchSGDConfig:
     hash_key: int = 0
     error_mode: str = "zero"        # "zero" (paper practice) | "subtract" (Alg. 1)
     momentum_masking: bool = True
-    impl: str = "auto"              # sketch kernel dispatch: auto|pallas|xla
+    # sketch kernel dispatch: auto | jnp (alias xla) | pallas (compiled) |
+    # pallas-interpret (validation only) — see repro.kernels.ops
+    impl: str = "auto"
 
     def __post_init__(self):
         if self.error_mode not in ("zero", "subtract"):
             raise ValueError(f"bad error_mode {self.error_mode}")
+        kernel_ops.normalize_impl(self.impl)   # raise early on a bad name
 
 
 @jax.tree_util.register_dataclass
@@ -125,26 +128,64 @@ def sketch_grads(grads, layout: layout_lib.ParamLayout, cfg: FetchSGDConfig,
 def unsketch_topk(table: jax.Array, layout: layout_lib.ParamLayout,
                   cfg: FetchSGDConfig) -> topk_lib.SparseDelta:
     """Delta = Top-k(U(table)) over the global flat space."""
-    return topk_lib.topk_from_sketch(table, layout, cfg.k, cfg.hash_key)
+    return topk_lib.topk_from_sketch(table, layout, cfg.k, cfg.hash_key,
+                                     impl=cfg.impl)
 
 
 def server_step(agg_table: jax.Array, state: FetchSGDState, lr: jax.Array,
                 layout: layout_lib.ParamLayout, cfg: FetchSGDConfig
                 ) -> tuple[topk_lib.SparseDelta, FetchSGDState]:
-    """One aggregator update given the mean client sketch S^t."""
+    """One aggregator update given the mean client sketch S^t — fused.
+
+    The hot path: momentum + error accumulation fuse into one kernel call,
+    the top-k row-estimates run through the selected sketch impl, and the
+    post-extraction update (error zeroing / sparse re-sketch subtraction +
+    momentum factor masking) is a second fused call that hashes the
+    extracted ids once.  With ``cfg.impl`` resolving to Pallas the sketch
+    tables stay VMEM-resident within each phase (``repro.kernels.
+    server_step``); with ``jnp`` the same algebra runs as XLA ops and is
+    bitwise identical to :func:`server_step_reference` (pinned in
+    ``tests/test_server_step.py``).
+    """
+    su, se = kernel_ops.fused_momentum_error(
+        agg_table, state.momentum_sketch, state.error_sketch, lr,
+        cfg.momentum, impl=cfg.impl)
+    delta = unsketch_topk(se, layout, cfg)
+    hi, lo = topk_lib.global_ids(delta, layout)
+    su, se = kernel_ops.fused_topk_mask(
+        su, se, hi, lo, delta.values, cfg.hash_key,
+        error_mode=cfg.error_mode, momentum_masking=cfg.momentum_masking,
+        impl=cfg.impl)
+    new_state = FetchSGDState(momentum_sketch=su, error_sketch=se,
+                              step=state.step + 1)
+    return delta, new_state
+
+
+def server_step_reference(agg_table: jax.Array, state: FetchSGDState,
+                          lr: jax.Array, layout: layout_lib.ParamLayout,
+                          cfg: FetchSGDConfig
+                          ) -> tuple[topk_lib.SparseDelta, FetchSGDState]:
+    """Unfused oracle: the update phase-by-phase as separate jnp ops.
+
+    Kept as the parity target for the fused paths; the one hit-mask serves
+    both error zeroing and momentum masking (the ids hash identically for
+    both — computing it twice, as an earlier revision did, was pure waste).
+    """
     su = cfg.momentum * state.momentum_sketch + agg_table
     se = lr * su + state.error_sketch
-    delta = unsketch_topk(se, layout, cfg)
+    delta = topk_lib.topk_from_sketch(se, layout, cfg.k, cfg.hash_key,
+                                      impl="jnp")
 
     hi, lo = topk_lib.global_ids(delta, layout)
-    if cfg.error_mode == "zero":
+    mask = None
+    if cfg.error_mode == "zero" or cfg.momentum_masking:
         mask = cs.hit_mask_ids(hi, lo, cfg.rows, cfg.cols, cfg.hash_key)
+    if cfg.error_mode == "zero":
         se = jnp.where(mask, 0.0, se)
     else:
         se = se - cs.sketch_sparse(hi, lo, delta.values, cfg.rows, cfg.cols,
                                    cfg.hash_key)
     if cfg.momentum_masking:
-        mask = cs.hit_mask_ids(hi, lo, cfg.rows, cfg.cols, cfg.hash_key)
         su = jnp.where(mask, 0.0, su)
 
     new_state = FetchSGDState(momentum_sketch=su, error_sketch=se,

@@ -27,7 +27,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import count_sketch as cs
 from . import hashing
 from . import layout as layout_lib
 
@@ -52,8 +51,15 @@ def _chunk_k(k: int, chunk_size: int, num_chunks: int) -> int:
 
 
 def topk_from_sketch(table: jax.Array, layout: layout_lib.ParamLayout,
-                     k: int, key: int = 0) -> SparseDelta:
-    """Top-|.|-k of U(table) over the whole layout (scanned unsketch)."""
+                     k: int, key: int = 0, *,
+                     impl: str = "auto") -> SparseDelta:
+    """Top-|.|-k of U(table) over the whole layout (scanned unsketch).
+
+    ``impl`` selects the row-estimate kernel (``repro.kernels.ops``): the
+    per-chunk U(.) gather is the decode hot spot, so the Pallas estimate
+    kernel slots in here while the candidate ``lax.top_k`` stays XLA.
+    """
+    from repro.kernels import ops as kernel_ops
     rows, cols = table.shape
     nall = layout.num_chunks
     cand_vals, cand_local, cand_chunk = [], [], []
@@ -66,7 +72,8 @@ def topk_from_sketch(table: jax.Array, layout: layout_lib.ParamLayout,
 
         def body(off):
             lo, hi, cid = off
-            est = cs.estimate_chunk_dyn(table, lo, hi, size, rows, cols, key)
+            est = kernel_ops.sketch_estimate_words(table, lo, hi, size, key,
+                                                   impl=impl)
             _, idx = jax.lax.top_k(jnp.abs(est), kk)
             return est[idx], idx.astype(jnp.int32), jnp.full((kk,), cid,
                                                              jnp.int32)

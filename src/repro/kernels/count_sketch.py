@@ -155,17 +155,19 @@ def _estimate_kernel(off_ref, table_ref, out_ref, *, rows: int, cols: int,
     out_ref[...] = jnp.median(jnp.stack(ests), axis=0)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("offset", "n", "key", "block", "interpret"))
-def sketch_estimate(table: jax.Array, offset: int, n: int, key: int = 0, *,
-                    block: int = 512, interpret: bool = False) -> jax.Array:
-    """Pallas decode: median-of-rows estimates for ids offset..offset+n."""
+def sketch_estimate_words(table: jax.Array, off: jax.Array, n: int,
+                          key: int = 0, *, block: int = 512,
+                          interpret: bool = False) -> jax.Array:
+    """Pallas decode with a *traced* 64-bit base offset ``off = [lo, hi]``.
+
+    Used by the scanned unsketch (``repro.core.topk``): chunk offsets are
+    selected on-device inside a ``lax.map``, so the base must stay traced.
+    """
     rows, cols = table.shape
     if cols % LANES != 0:
         raise ValueError(f"Pallas estimate needs cols % {LANES} == 0, got {cols}")
     c_outer = cols // LANES
     n_blocks = -(-n // block)
-    off = jnp.array([offset & 0xFFFFFFFF, offset >> 32], dtype=U32)
     out = pl.pallas_call(
         functools.partial(_estimate_kernel, rows=rows, cols=cols, key=key,
                           block=block),
@@ -177,5 +179,15 @@ def sketch_estimate(table: jax.Array, offset: int, n: int, key: int = 0, *,
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_blocks * block,), jnp.float32),
         interpret=interpret,
-    )(off, table.reshape(rows, c_outer, LANES))
+    )(off.astype(U32), table.reshape(rows, c_outer, LANES))
     return out[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("offset", "n", "key", "block", "interpret"))
+def sketch_estimate(table: jax.Array, offset: int, n: int, key: int = 0, *,
+                    block: int = 512, interpret: bool = False) -> jax.Array:
+    """Pallas decode: median-of-rows estimates for ids offset..offset+n."""
+    off = jnp.array([offset & 0xFFFFFFFF, offset >> 32], dtype=U32)
+    return sketch_estimate_words(table, off, n, key, block=block,
+                                 interpret=interpret)

@@ -1,16 +1,26 @@
 """Dispatching wrappers around the Count Sketch kernels.
 
-``sketch_encode`` / ``sketch_estimate`` pick between:
+Every sketch op picks one of three implementations (``--sketch-impl``):
 
-* the Pallas MXU kernel (``repro.kernels.count_sketch``) — TPU target,
-  requires ``cols % 128 == 0`` and a VMEM-resident table
-  (``rows * cols * 4B <= ~8 MiB``); run with ``interpret=True`` on CPU;
-* the XLA scatter/gather path (``repro.kernels.ref``) — always available,
+* ``jnp`` (alias ``xla``) — the XLA scatter/gather path
+  (``repro.kernels.ref`` / ``repro.core.count_sketch``): always available,
   and the better choice for very wide sketches where the one-hot
-  contraction's ``B x C_o`` materialization stops paying for itself.
+  contraction's ``B x C_o`` materialization stops paying for itself;
+* ``pallas`` — the **compiled** Pallas MXU kernel
+  (``repro.kernels.count_sketch`` / ``repro.kernels.server_step``): the
+  production hot path on TPU/GPU backends.  Requires ``cols % 128 == 0``
+  and a VMEM-resident table (``rows * cols * 4B <= ~8 MiB``).  Requesting
+  it on a backend that cannot compile Pallas raises
+  :class:`ImplUnavailableError` — loudly, never a silent fallback;
+* ``pallas-interpret`` — the same Pallas kernels run through the
+  interpreter (``interpret=True``).  Validation-only: bit-identical hash
+  semantics, ~27x slower than XLA on CPU.  Never selected automatically.
 
-The two paths are bit-compatible w.r.t. hash identity (same
-``repro.core.hashing`` family), so sketches built by either can be merged.
+``auto`` resolves to ``pallas`` when the backend can compile it and the
+shape qualifies, else ``jnp`` — the interpreter is *never* the hot path.
+
+All paths are bit-compatible w.r.t. hash identity (same
+``repro.core.hashing`` family), so sketches built by any can be merged.
 
 Telemetry: ``set_telemetry(tele)`` arms wall-clock spans around *eager*
 kernel dispatches (``kernel.encode[pallas]`` etc., device-synced via
@@ -33,7 +43,19 @@ from . import ref
 # comfortably alongside the one-hot tiles; fall back to XLA scatter.
 _PALLAS_MAX_TABLE_BYTES = 8 * 1024 * 1024
 
+# The fused top-k mask kernel keeps up to 6 table-shaped buffers live
+# (su/se in + out, hit + delta accumulators), so its VMEM budget per table
+# is tighter than the single-accumulator encode kernel's.
+_FUSED_MAX_TABLE_BYTES = 2 * 1024 * 1024
+
+IMPLS = ("auto", "jnp", "pallas", "pallas-interpret")
+_ALIASES = {"xla": "jnp"}
+
 _TELE = obs.NOOP
+
+
+class ImplUnavailableError(RuntimeError):
+    """A requested sketch implementation cannot run on this backend."""
 
 
 def set_telemetry(tele) -> None:
@@ -49,37 +71,97 @@ def _span(name: str, operand):
     return obs.NULL_SPAN
 
 
+def normalize_impl(impl: str) -> str:
+    impl = _ALIASES.get(impl, impl)
+    if impl not in IMPLS:
+        raise ValueError(f"unknown sketch impl {impl!r}; choose from "
+                         f"{IMPLS} (alias: xla -> jnp)")
+    return impl
+
+
+def pallas_compile_supported() -> bool:
+    """Can this backend run Pallas kernels compiled (non-interpret)?"""
+    return jax.default_backend() in ("tpu", "gpu", "cuda", "rocm")
+
+
+def available_impls() -> tuple[str, ...]:
+    """Concrete impls that can actually run here (excludes ``auto``)."""
+    impls = ["jnp", "pallas-interpret"]
+    if pallas_compile_supported():
+        impls.append("pallas")
+    return tuple(impls)
+
+
+def require_impl(impl: str) -> str:
+    """Normalize and verify ``impl`` runs on this backend, loudly.
+
+    ``pallas`` on a CPU backend raises :class:`ImplUnavailableError` with
+    the fix spelled out — a silent interpret fallback would report
+    interpreter timings as the compiled hot path.
+    """
+    impl = normalize_impl(impl)
+    if impl == "pallas" and not pallas_compile_supported():
+        raise ImplUnavailableError(
+            f"sketch impl 'pallas' (compiled) is unavailable on the "
+            f"{jax.default_backend()!r} backend: Pallas only compiles for "
+            f"TPU/GPU.  Use 'pallas-interpret' for validation or 'jnp' for "
+            f"the XLA hot path.")
+    return impl
+
+
 def _pallas_ok(rows: int, cols: int) -> bool:
     return cols % 128 == 0 and rows * cols * 4 <= _PALLAS_MAX_TABLE_BYTES
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _fused_ok(rows: int, cols: int) -> bool:
+    return cols % 128 == 0 and rows * cols * 4 <= _FUSED_MAX_TABLE_BYTES
+
+
+def _resolve(impl: str, rows: int, cols: int,
+             fused: bool = False) -> tuple[str, bool]:
+    """(path, interpret) for one dispatch; path in {'jnp', 'pallas'}.
+
+    ``auto`` never picks the interpreter: on backends without compiled
+    Pallas the hot path is XLA, and interpret mode stays an explicit,
+    validation-only choice.
+    """
+    impl = normalize_impl(impl)
+    if impl == "auto":
+        ok = _fused_ok(rows, cols) if fused else _pallas_ok(rows, cols)
+        if ok and pallas_compile_supported():
+            return "pallas", False
+        return "jnp", False
+    if impl == "jnp":
+        return "jnp", False
+    if impl == "pallas":
+        require_impl(impl)
+        return "pallas", False
+    return "pallas", True    # pallas-interpret
+
+
+def _mode(path: str, interpret: bool) -> str:
+    return "interpret" if (path == "pallas" and interpret) else "compiled"
 
 
 def sketch_encode(values: jax.Array, offset: int, rows: int, cols: int,
                   key: int = 0, *, impl: str = "auto") -> jax.Array:
-    """(rows, cols) sketch contribution of a chunk; impl in {auto,pallas,xla}."""
-    if impl == "auto":
-        impl = "pallas" if _pallas_ok(rows, cols) else "xla"
-    mode = "interpret" if (impl == "pallas" and _interpret()) else "compiled"
-    with _span(f"kernel.encode[{impl}:{mode}]", values) as sp:
-        if impl == "pallas":
+    """(rows, cols) sketch contribution of a chunk."""
+    path, interp = _resolve(impl, rows, cols)
+    with _span(f"kernel.encode[{path}:{_mode(path, interp)}]", values) as sp:
+        if path == "pallas":
             return sp.sync(pallas_cs.sketch_encode(
-                values, offset, rows, cols, key, interpret=_interpret()))
+                values, offset, rows, cols, key, interpret=interp))
         return sp.sync(ref.sketch_encode(values, offset, rows, cols, key))
 
 
 def sketch_estimate(table: jax.Array, offset: int, n: int, key: int = 0, *,
                     impl: str = "auto") -> jax.Array:
     rows, cols = table.shape
-    if impl == "auto":
-        impl = "pallas" if _pallas_ok(rows, cols) else "xla"
-    mode = "interpret" if (impl == "pallas" and _interpret()) else "compiled"
-    with _span(f"kernel.estimate[{impl}:{mode}]", table) as sp:
-        if impl == "pallas":
+    path, interp = _resolve(impl, rows, cols)
+    with _span(f"kernel.estimate[{path}:{_mode(path, interp)}]", table) as sp:
+        if path == "pallas":
             return sp.sync(pallas_cs.sketch_estimate(
-                table, offset, n, key, interpret=_interpret()))
+                table, offset, n, key, interpret=interp))
         return sp.sync(ref.sketch_estimate(table, offset, n, key))
 
 
@@ -88,13 +170,70 @@ def sketch_encode_words(values: jax.Array, off_lo: jax.Array,
                         key: int = 0, *, impl: str = "auto") -> jax.Array:
     """Encode with a traced 64-bit base offset (EP shards, scanned chunks)."""
     from repro.core import count_sketch as core_cs
-    if impl == "auto":
-        impl = "pallas" if _pallas_ok(rows, cols) else "xla"
-    mode = "interpret" if (impl == "pallas" and _interpret()) else "compiled"
-    with _span(f"kernel.encode_words[{impl}:{mode}]", values) as sp:
-        if impl == "pallas":
+    path, interp = _resolve(impl, rows, cols)
+    with _span(f"kernel.encode_words[{path}:{_mode(path, interp)}]",
+               values) as sp:
+        if path == "pallas":
             off = jnp.stack([off_lo, off_hi]).astype(jnp.uint32)
             return sp.sync(pallas_cs.sketch_encode_words(
-                values, off, rows, cols, key, interpret=_interpret()))
+                values, off, rows, cols, key, interpret=interp))
         return sp.sync(core_cs.sketch_chunk_dyn(values, off_lo, off_hi,
                                                 rows, cols, key))
+
+
+def sketch_estimate_words(table: jax.Array, off_lo: jax.Array,
+                          off_hi: jax.Array, n: int, key: int = 0, *,
+                          impl: str = "auto") -> jax.Array:
+    """Estimate with a traced 64-bit base offset (scanned unsketch)."""
+    from repro.core import count_sketch as core_cs
+    rows, cols = table.shape
+    path, interp = _resolve(impl, rows, cols)
+    with _span(f"kernel.estimate_words[{path}:{_mode(path, interp)}]",
+               table) as sp:
+        if path == "pallas":
+            off = jnp.stack([off_lo, off_hi]).astype(jnp.uint32)
+            return sp.sync(pallas_cs.sketch_estimate_words(
+                table, off, n, key, interpret=interp))
+        return sp.sync(core_cs.estimate_chunk_dyn(table, off_lo, off_hi, n,
+                                                  rows, cols, key))
+
+
+# -- fused server-step phases -------------------------------------------------
+
+def fused_momentum_error(agg: jax.Array, su: jax.Array, se: jax.Array,
+                         lr, momentum: float, *,
+                         impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """One pass: ``su' = momentum*su + agg``, ``se' = lr*su' + se``.
+
+    The Pallas path keeps the (rows, cols) tables VMEM-resident across both
+    updates — the 4 separate jnp ops it replaces round-trip three
+    intermediate tables through HBM.
+    """
+    from . import server_step as fused
+    rows, cols = agg.shape
+    path, interp = _resolve(impl, rows, cols, fused=True)
+    with _span(f"kernel.momentum_error[{path}:{_mode(path, interp)}]",
+               agg) as sp:
+        if path == "pallas":
+            return sp.sync(fused.momentum_error(agg, su, se, lr, momentum,
+                                                interpret=interp))
+        return sp.sync(fused.momentum_error_jnp(agg, su, se, lr, momentum))
+
+
+def fused_topk_mask(su: jax.Array, se: jax.Array, hi: jax.Array,
+                    lo: jax.Array, values: jax.Array, key: int = 0, *,
+                    error_mode: str = "zero", momentum_masking: bool = True,
+                    impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """One pass over the extracted ids: error zeroing / sparse re-sketch
+    subtraction plus momentum factor masking, hit cells computed once."""
+    from . import server_step as fused
+    rows, cols = su.shape
+    path, interp = _resolve(impl, rows, cols, fused=True)
+    with _span(f"kernel.topk_mask[{path}:{_mode(path, interp)}]", su) as sp:
+        if path == "pallas":
+            return sp.sync(fused.topk_mask(
+                su, se, hi, lo, values, key, error_mode=error_mode,
+                momentum_masking=momentum_masking, interpret=interp))
+        return sp.sync(fused.topk_mask_jnp(
+            su, se, hi, lo, values, key, error_mode=error_mode,
+            momentum_masking=momentum_masking))

@@ -76,7 +76,8 @@ def run_simulation(cfg, *, method: str = "fetchsgd", rounds: int = 30,
                    dataset=None, seed: int = 0,
                    eval_every: int = 1, aggregate: str = "flat",
                    fed_cfg: fed.FederationConfig | None = None,
-                   telemetry=None, health_every: int = 1) -> SimResult:
+                   telemetry=None, health_every: int = 1,
+                   sketch_impl: str = "auto") -> SimResult:
     dataset = dataset or synthetic.ClassShardLM(
         vocab=cfg.vocab, seq_len=32, n_classes=8, n_clients=256,
         samples_per_client=4, seed=seed)
@@ -93,7 +94,7 @@ def run_simulation(cfg, *, method: str = "fetchsgd", rounds: int = 30,
         # dropout/stragglers, and the pluggable aggregation policy
         # (flat = the old inline mean; tree/async exercise linearity).
         fs_cfg = fs_cfg or F.FetchSGDConfig(rows=5, cols=1 << 14, k=512,
-                                            momentum=0.9)
+                                            momentum=0.9, impl=sketch_impl)
         fed_cfg = fed_cfg or fed.FederationConfig(
             rounds=rounds, clients_per_round=clients_per_round,
             aggregate=aggregate, seed=seed)
@@ -254,6 +255,13 @@ def main(argv=None):
     ap.add_argument("--weight-by", default="uniform",
                     choices=("uniform", "samples", "profile"),
                     help="per-client merge weights (FedSKETCH-style)")
+    ap.add_argument("--sketch-impl", default="auto",
+                    choices=("auto", "jnp", "pallas-interpret", "pallas"),
+                    help="count-sketch kernel impl (repro.kernels.ops): "
+                         "jnp = XLA scatter/gather, pallas = compiled "
+                         "Pallas hot path (TPU/GPU; fails loudly "
+                         "elsewhere), pallas-interpret = validation-only "
+                         "interpreter, auto = best compiled path")
     # event clock (fed.simtime): wall-clock federation over heterogeneous
     # client profiles
     ap.add_argument("--clock", default="round", choices=("round", "event"))
@@ -291,6 +299,9 @@ def main(argv=None):
     if args.clients_per_round is None:
         args.clients_per_round = (max(4, args.population // 100)
                                   if args.population is not None else 4)
+
+    from repro.kernels import ops as kernel_ops
+    kernel_ops.require_impl(args.sketch_impl)   # loud, before any compile
 
     cfg = micro_cfg()
     dataset = micro_dataset(cfg, seed=args.seed,
@@ -333,7 +344,8 @@ def main(argv=None):
                              seed=args.seed, aggregate=args.aggregate,
                              fed_cfg=fed_cfg if args.method == "fetchsgd"
                              else None, telemetry=telemetry,
-                             health_every=args.health_every)
+                             health_every=args.health_every,
+                             sketch_impl=args.sketch_impl)
     finally:
         telemetry.close()
     if args.metrics:

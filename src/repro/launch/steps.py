@@ -205,6 +205,10 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
         aggregate = "sketch"
     if aggregate not in ("sketch", "tree", "async", "dense"):
         raise ValueError(f"unknown aggregate policy {aggregate!r}")
+    # fail loudly at build time (not mid-trace) if the configured sketch
+    # impl cannot run here — e.g. compiled Pallas on a CPU backend
+    from repro.kernels import ops as kernel_ops
+    kernel_ops.require_impl(fs_cfg.impl)
     if weighted and aggregate not in ("sketch", "tree"):
         raise ValueError("weighted merging needs aggregate='sketch'|'tree' "
                          f"(got {aggregate!r})")

@@ -54,6 +54,12 @@ def main():
     ap.add_argument("--k", type=int, default=512)
     ap.add_argument("--aggregate", default="flat",
                     choices=("flat", "sketch", "tree", "async", "dense"))
+    ap.add_argument("--sketch-impl", default="auto",
+                    choices=("auto", "jnp", "pallas-interpret", "pallas"),
+                    help="count-sketch kernel impl: jnp = XLA "
+                         "scatter/gather, pallas = compiled Pallas hot "
+                         "path (TPU/GPU; fails loudly elsewhere), "
+                         "pallas-interpret = validation-only interpreter")
     ap.add_argument("--straggle-prob", type=float, default=0.3,
                     help="async: probability a round's cohort reports late")
     ap.add_argument("--staleness-discount", type=float, default=0.9)
@@ -82,7 +88,8 @@ def main():
            else configs.get_config(args.arch))
     shape = shapes.ShapeSpec("train", "train", args.seq_len,
                              args.global_batch)
-    fs = F.FetchSGDConfig(rows=5, cols=args.cols, k=args.k, momentum=0.9)
+    fs = F.FetchSGDConfig(rows=5, cols=args.cols, k=args.k, momentum=0.9,
+                          impl=args.sketch_impl)
     bundle = steps.make_train_step(cfg, shape, mesh, fs,
                                    aggregate=args.aggregate)
 

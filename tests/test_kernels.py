@@ -18,6 +18,19 @@ TABLES = [(3, 256), (5, 1024), (1, 128), (7, 8192)]
 EDGE_SHAPES = [1, 127, 129, 3000]
 EDGE_TABLES = [(2, 384), (9, 640), (4, 1920)]
 
+# every Pallas-backed impl the dispatcher knows.  The compiled path only
+# exists on backends whose lowering Pallas supports (TPU/GPU); on CPU the
+# params skip cleanly instead of failing, so the same sweep pins compiled
+# parity the moment it runs on capable hardware.
+needs_compiled = pytest.mark.skipif(
+    not ops.pallas_compile_supported(),
+    reason=f"backend {jax.default_backend()!r} cannot compile Pallas "
+           "(interpret-only)")
+PALLAS_IMPLS = [
+    pytest.param("pallas-interpret", id="interpret"),
+    pytest.param("pallas", id="compiled", marks=needs_compiled),
+]
+
 
 @pytest.mark.parametrize("n", [s[0] for s in SHAPES])
 @pytest.mark.parametrize("dtype", DTYPES, ids=str)
@@ -66,21 +79,76 @@ def test_zero_padding_is_noop(rng):
 
 def test_ops_dispatch(rng):
     v = jnp.asarray(rng.normal(size=256).astype(np.float32))
-    a = ops.sketch_encode(v, 0, 3, 256, impl="pallas")
+    a = ops.sketch_encode(v, 0, 3, 256, impl="pallas-interpret")
     b = ops.sketch_encode(v, 0, 3, 256, impl="xla")
     np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
-    # non-128-multiple cols must fall back to xla without error
+    # non-128-multiple cols must fall back to jnp without error
     c = ops.sketch_encode(v, 0, 3, 300, impl="auto")
     assert c.shape == (3, 300)
+
+
+def test_impl_normalization():
+    assert ops.normalize_impl("xla") == "jnp"
+    assert ops.normalize_impl("jnp") == "jnp"
+    assert ops.normalize_impl("pallas-interpret") == "pallas-interpret"
+    with pytest.raises(ValueError, match="unknown sketch impl"):
+        ops.normalize_impl("cuda-graphs")
+
+
+def test_available_impls_contract():
+    avail = ops.available_impls()
+    assert "jnp" in avail and "pallas-interpret" in avail
+    assert ("pallas" in avail) == ops.pallas_compile_supported()
+    for impl in avail:
+        ops.require_impl(impl)          # must not raise
+    ops.require_impl("auto")            # auto is always satisfiable
+
+
+@pytest.mark.skipif(ops.pallas_compile_supported(),
+                    reason="compiled Pallas exists here; nothing to refuse")
+def test_compiled_pallas_unavailable_is_loud(rng):
+    """Requesting the compiled impl on an interpret-only backend must fail
+    fast with an actionable message — never silently fall back."""
+    with pytest.raises(ops.ImplUnavailableError, match="pallas"):
+        ops.require_impl("pallas")
+    v = jnp.asarray(rng.normal(size=256).astype(np.float32))
+    with pytest.raises(ops.ImplUnavailableError):
+        ops.sketch_encode(v, 0, 3, 256, impl="pallas")
+
+
+def test_auto_never_picks_interpreter(rng):
+    """``auto`` resolves to compiled Pallas or jnp — the interpreter is a
+    validation tool (~27x slower than XLA) and must be explicit opt-in."""
+    path, interpret = ops._resolve("auto", 3, 256)
+    assert not interpret
+    if not ops.pallas_compile_supported():
+        assert path == "jnp"
 
 
 def test_mergeability_across_impls(rng):
     """Sketches from the Pallas and XLA paths share hash identity."""
     g = rng.normal(size=1000).astype(np.float32)
-    t1 = ops.sketch_encode(jnp.asarray(g[:500]), 0, 3, 512, impl="pallas")
+    t1 = ops.sketch_encode(jnp.asarray(g[:500]), 0, 3, 512,
+                           impl="pallas-interpret")
     t2 = ops.sketch_encode(jnp.asarray(g[500:]), 500, 3, 512, impl="xla")
     whole = ref.sketch_encode(jnp.asarray(g), 0, 3, 512)
     np.testing.assert_allclose(t1 + t2, whole, rtol=1e-5, atol=1e-4)
+
+
+def test_estimate_words_dynamic_offset(rng):
+    """Traced (lo, hi) offset estimate matches the static-offset kernel
+    and the oracle — this is the variant the top-k readout drives."""
+    n = 700
+    v = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    off = (3 << 32) + 12345
+    tbl = ref.sketch_encode(v, off, 3, 512, key=6)
+    lo = jnp.uint32(off & 0xFFFFFFFF)
+    hi = jnp.uint32(off >> 32)
+    for impl in ("jnp", "pallas-interpret"):
+        out = ops.sketch_estimate_words(tbl, lo, hi, n, 6, impl=impl)
+        want = ref.sketch_estimate(tbl, off, n, key=6)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"impl={impl}")
 
 
 @pytest.mark.parametrize("n", EDGE_SHAPES)
@@ -103,6 +171,56 @@ def test_estimate_edge_shapes(rng, n, rows, cols):
     out = pk.sketch_estimate(tbl, 55, n, key=4, interpret=True)
     want = ref.sketch_estimate(tbl, 55, n, key=4)
     np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", PALLAS_IMPLS)
+@pytest.mark.parametrize("n", EDGE_SHAPES)
+@pytest.mark.parametrize("rows,cols", EDGE_TABLES)
+def test_dispatch_edge_shapes(rng, impl, n, rows, cols):
+    """The same awkward-size sweep through the ``ops`` dispatcher: the
+    interpreter param always runs; the compiled param skips on backends
+    that cannot lower Pallas and pins parity everywhere else."""
+    v = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    tbl = ops.sketch_encode(v, 321, rows, cols, key=3, impl=impl)
+    np.testing.assert_allclose(
+        tbl, ref.sketch_encode(v, 321, rows, cols, key=3),
+        rtol=1e-5, atol=1e-5)
+    est = ops.sketch_estimate(tbl, 321, n, key=3, impl=impl)
+    np.testing.assert_allclose(
+        est, ref.sketch_estimate(tbl, 321, n, key=3),
+        rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("impl", PALLAS_IMPLS)
+@pytest.mark.parametrize("rows,cols", EDGE_TABLES)
+@pytest.mark.parametrize("error_mode", ["zero", "subtract"])
+def test_fused_server_kernels_edge_tables(rng, impl, rows, cols, error_mode):
+    """Fused momentum/error and top-k hit-mask kernels vs the jnp fused
+    path at the edge tables (odd rows, non-power-of-two 128-multiple
+    cols), for both error feedback modes."""
+    agg = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))
+    su = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))
+    se = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))
+    su_j, se_j = ops.fused_momentum_error(agg, su, se, 0.05, 0.9,
+                                          impl="jnp")
+    su_p, se_p = ops.fused_momentum_error(agg, su, se, 0.05, 0.9,
+                                          impl=impl)
+    np.testing.assert_allclose(su_p, su_j, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(se_p, se_j, rtol=1e-5, atol=1e-5)
+
+    # a ragged top-k id set: k not a multiple of the kernel block, ids
+    # straddling the 32-bit word boundary
+    k = 13
+    ids = np.unique(rng.integers(0, 2**33, size=k).astype(np.uint64))
+    hi = jnp.asarray((ids >> 32).astype(np.uint32))
+    lo = jnp.asarray((ids & 0xFFFFFFFF).astype(np.uint32))
+    vals = jnp.asarray(rng.normal(size=ids.size).astype(np.float32))
+    out_j = ops.fused_topk_mask(su_j, se_j, hi, lo, vals, 3,
+                                error_mode=error_mode, impl="jnp")
+    out_p = ops.fused_topk_mask(su_j, se_j, hi, lo, vals, 3,
+                                error_mode=error_mode, impl=impl)
+    for a, b in zip(out_p, out_j):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("cols", [130, 300, 1000])

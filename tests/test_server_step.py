@@ -1,0 +1,208 @@
+"""Fused server-step parity: the hot path must never drift from Alg. 1.
+
+``repro.core.fetchsgd.server_step`` fuses the aggregator update (momentum
++ error accumulation, top-k extraction, hit-mask zeroing / sparse
+re-sketch subtraction) into two kernel dispatches.  These tests pin it to
+``server_step_reference`` — the phase-by-phase unfused oracle — three
+ways:
+
+* **bitwise** on the jnp path (same XLA op sequence, so exact equality,
+  not allclose: any reassociation of the algebra is a regression);
+* **allclose** through the Pallas interpreter (and the compiled kernels,
+  skip-gated on backend support);
+* **properties** (hypothesis, when installed): the fused momentum/error
+  phase is linear in all three sketch operands, and both
+  ``error_mode`` variants match the reference across random cohorts.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fetchsgd as F
+from repro.core import layout as L
+from repro.kernels import ops
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+needs_compiled = pytest.mark.skipif(
+    not ops.pallas_compile_supported(),
+    reason=f"backend {jax.default_backend()!r} cannot compile Pallas "
+           "(interpret-only)")
+PALLAS_IMPLS = [
+    pytest.param("pallas-interpret", id="interpret"),
+    pytest.param("pallas", id="compiled", marks=needs_compiled),
+]
+
+# cols a 128-multiple that is not a power of two, odd rows: the shapes
+# the Pallas kernels historically got wrong
+ROWS, COLS, K = 3, 384, 8
+
+
+def make_cfg(**kw):
+    kw.setdefault("rows", ROWS)
+    kw.setdefault("cols", COLS)
+    kw.setdefault("k", K)
+    kw.setdefault("momentum", 0.9)
+    return F.FetchSGDConfig(**kw)
+
+
+@pytest.fixture
+def lay():
+    return L.build_layout({"a": jnp.zeros((32, 16)), "b": jnp.zeros((64,))})
+
+
+def cohort_agg(rng, lay, cfg, n_clients=3):
+    """Mean sketch over a random client cohort (the real server input)."""
+    tables = []
+    for _ in range(n_clients):
+        g = {"a": jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+        tables.append(F.sketch_grads(g, lay, cfg))
+    return sum(tables) / n_clients
+
+
+def assert_states_bitwise(s1, s2):
+    np.testing.assert_array_equal(np.asarray(s1.momentum_sketch),
+                                  np.asarray(s2.momentum_sketch))
+    np.testing.assert_array_equal(np.asarray(s1.error_sketch),
+                                  np.asarray(s2.error_sketch))
+    np.testing.assert_array_equal(np.asarray(s1.step), np.asarray(s2.step))
+
+
+@pytest.mark.parametrize("error_mode", ["zero", "subtract"])
+@pytest.mark.parametrize("momentum_masking", [True, False])
+def test_fused_matches_reference_bitwise(rng, lay, error_mode,
+                                         momentum_masking):
+    """Satellite regression: fused (jnp) and unfused server steps produce
+    bitwise-identical FetchSGDState — across consecutive rounds, so the
+    states never diverge even transitively."""
+    cfg = make_cfg(error_mode=error_mode, momentum_masking=momentum_masking,
+                   impl="jnp")
+    st_f = st_r = F.init_state(cfg)
+    for _ in range(3):
+        agg = cohort_agg(rng, lay, cfg)
+        d_f, st_f = F.server_step(agg, st_f, jnp.float32(0.05), lay, cfg)
+        d_r, st_r = F.server_step_reference(agg, st_r, jnp.float32(0.05),
+                                            lay, cfg)
+        np.testing.assert_array_equal(np.asarray(d_f.values),
+                                      np.asarray(d_r.values))
+        np.testing.assert_array_equal(np.asarray(d_f.chunk_id),
+                                      np.asarray(d_r.chunk_id))
+        np.testing.assert_array_equal(np.asarray(d_f.local_idx),
+                                      np.asarray(d_r.local_idx))
+        assert_states_bitwise(st_f, st_r)
+
+
+@pytest.mark.parametrize("impl", PALLAS_IMPLS)
+@pytest.mark.parametrize("error_mode", ["zero", "subtract"])
+def test_pallas_server_step_matches_reference(rng, lay, impl, error_mode):
+    """The full Pallas server step (fused momentum/error kernel, estimate
+    kernel through top-k, fused hit-mask kernel) vs the jnp oracle."""
+    cfg = make_cfg(error_mode=error_mode, impl=impl)
+    ref_cfg = dataclasses.replace(cfg, impl="jnp")
+    st = F.init_state(cfg)
+    agg = cohort_agg(rng, lay, ref_cfg)
+    d_p, st_p = F.server_step(agg, st, jnp.float32(0.05), lay, cfg)
+    d_r, st_r = F.server_step_reference(agg, st, jnp.float32(0.05), lay,
+                                        ref_cfg)
+    np.testing.assert_allclose(d_p.values, d_r.values, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(d_p.chunk_id),
+                                  np.asarray(d_r.chunk_id))
+    np.testing.assert_array_equal(np.asarray(d_p.local_idx),
+                                  np.asarray(d_r.local_idx))
+    np.testing.assert_allclose(st_p.momentum_sketch, st_r.momentum_sketch,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(st_p.error_sketch, st_r.error_sketch,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_under_jit_matches_eager(rng, lay):
+    """The trainer jits server_step; jit must not change the numbers."""
+    cfg = make_cfg(impl="jnp")
+    st = F.init_state(cfg)
+    agg = cohort_agg(rng, lay, cfg)
+    jitted = jax.jit(lambda a, s: F.server_step(a, s, jnp.float32(0.05),
+                                                lay, cfg))
+    d_j, st_j = jitted(agg, st)
+    d_e, st_e = F.server_step(agg, st, jnp.float32(0.05), lay, cfg)
+    np.testing.assert_allclose(d_j.values, d_e.values, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(st_j.error_sketch, st_e.error_sketch,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_momentum_error_defers_to_reference_algebra(rng):
+    """su' = rho*su + agg; se' = lr*su' + se — exact, per element."""
+    agg = jnp.asarray(rng.normal(size=(ROWS, COLS)).astype(np.float32))
+    su = jnp.asarray(rng.normal(size=(ROWS, COLS)).astype(np.float32))
+    se = jnp.asarray(rng.normal(size=(ROWS, COLS)).astype(np.float32))
+    su2, se2 = ops.fused_momentum_error(agg, su, se, 0.07, 0.9, impl="jnp")
+    np.testing.assert_array_equal(np.asarray(su2),
+                                  np.asarray(0.9 * su + agg))
+    np.testing.assert_array_equal(np.asarray(se2),
+                                  np.asarray(0.07 * su2 + se))
+
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = settings(max_examples=10, deadline=None)
+    scalars = st.floats(min_value=-2.0, max_value=2.0,
+                        allow_nan=False, allow_infinity=False)
+
+    @SETTINGS
+    @given(a=scalars, b=scalars, seed=st.integers(0, 2**16))
+    def test_fusion_preserves_sketch_linearity(a, b, seed):
+        """Sketch-space linearity survives fusion: running the fused
+        momentum/error phase on a*X1 + b*X2 equals the same combination
+        of per-input outputs.  This is the invariant that lets clients'
+        sketches be merged before *or* after the server update."""
+        r = np.random.default_rng(seed)
+        shape = (2, 128)
+        x1 = [jnp.asarray(r.normal(size=shape).astype(np.float32))
+              for _ in range(3)]
+        x2 = [jnp.asarray(r.normal(size=shape).astype(np.float32))
+              for _ in range(3)]
+        mixed = [a * p + b * q for p, q in zip(x1, x2)]
+        for impl in ("jnp", "pallas-interpret"):
+            su_m, se_m = ops.fused_momentum_error(*mixed, 0.05, 0.9,
+                                                  impl=impl)
+            su_1, se_1 = ops.fused_momentum_error(*x1, 0.05, 0.9, impl=impl)
+            su_2, se_2 = ops.fused_momentum_error(*x2, 0.05, 0.9, impl=impl)
+            np.testing.assert_allclose(su_m, a * su_1 + b * su_2,
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(se_m, a * se_1 + b * se_2,
+                                       rtol=1e-4, atol=1e-4)
+
+    @SETTINGS
+    @given(seed=st.integers(0, 2**16), n_clients=st.integers(1, 4),
+           error_mode=st.sampled_from(["zero", "subtract"]),
+           momentum_masking=st.booleans())
+    def test_error_modes_match_reference_on_random_cohorts(
+            seed, n_clients, error_mode, momentum_masking):
+        """Both error-feedback variants of the fused step agree with the
+        unfused reference for arbitrary cohorts — not just the
+        hand-picked fixtures above."""
+        r = np.random.default_rng(seed)
+        lay = L.build_layout({"a": jnp.zeros((32, 16)),
+                              "b": jnp.zeros((64,))})
+        cfg = make_cfg(error_mode=error_mode,
+                       momentum_masking=momentum_masking, impl="jnp")
+        st0 = F.init_state(cfg)
+        agg = cohort_agg(r, lay, cfg, n_clients=n_clients)
+        d_f, st_f = F.server_step(agg, st0, jnp.float32(0.05), lay, cfg)
+        d_r, st_r = F.server_step_reference(agg, st0, jnp.float32(0.05),
+                                            lay, cfg)
+        np.testing.assert_array_equal(np.asarray(d_f.values),
+                                      np.asarray(d_r.values))
+        assert_states_bitwise(st_f, st_r)
+else:                                                # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(requirements-dev.txt)")
+    def test_server_step_properties():
+        pass
