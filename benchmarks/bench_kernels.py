@@ -5,7 +5,7 @@ Times the sketch ops — encode, estimate, and the fused server step
 server_step``) — for each requested implementation:
 
 * ``jnp``               — XLA scatter/gather, jit-compiled (every backend);
-* ``pallas``            — compiled Pallas MXU kernels (TPU/GPU).  On a
+* ``pallas``            — compiled Pallas MXU kernels (TPU only).  On a
                           backend that cannot compile Pallas the rows are
                           still emitted, marked ``mode=unavailable`` with
                           ``us_per_call=-1`` — the trajectory records the

@@ -64,7 +64,7 @@ fi
 if [[ "$TIER" == "kernels" || "$TIER" == "all" ]]; then
     echo "== kernels: compiled-parity suite"
     # compiled-Pallas params skip (not fail) on backends that can only
-    # interpret Pallas; on TPU/GPU the same sweep pins compiled parity
+    # interpret Pallas; on TPU the same sweep pins compiled parity
     python -m pytest -x -q tests/test_kernels.py tests/test_server_step.py
     echo "== kernels perf trajectory (jnp + pallas impl comparison)"
     mkdir -p bench-out

@@ -8,10 +8,12 @@ Every sketch op picks one of three implementations (``--sketch-impl``):
   contraction's ``B x C_o`` materialization stops paying for itself;
 * ``pallas`` — the **compiled** Pallas MXU kernel
   (``repro.kernels.count_sketch`` / ``repro.kernels.server_step``): the
-  production hot path on TPU/GPU backends.  Requires ``cols % 128 == 0``
-  and a VMEM-resident table (``rows * cols * 4B <= ~8 MiB``).  Requesting
-  it on a backend that cannot compile Pallas raises
-  :class:`ImplUnavailableError` — loudly, never a silent fallback;
+  production hot path on the TPU backend.  Requires ``cols % 128 == 0``
+  and a VMEM-resident table (``rows * cols * 4B <= ~8 MiB``).  TPU-only:
+  the kernels accumulate across grid steps through a revisited output
+  block, which is correct under Mosaic's sequential grid but races under
+  GPU's parallel grid lowering.  Requesting it on any other backend
+  raises :class:`ImplUnavailableError` — loudly, never a silent fallback;
 * ``pallas-interpret`` — the same Pallas kernels run through the
   interpreter (``interpret=True``).  Validation-only: bit-identical hash
   semantics, ~27x slower than XLA on CPU.  Never selected automatically.
@@ -80,8 +82,17 @@ def normalize_impl(impl: str) -> str:
 
 
 def pallas_compile_supported() -> bool:
-    """Can this backend run Pallas kernels compiled (non-interpret)?"""
-    return jax.default_backend() in ("tpu", "gpu", "cuda", "rocm")
+    """Can this backend run our Pallas kernels compiled (non-interpret)?
+
+    TPU only.  The encode and fused top-k kernels accumulate partial
+    sums across grid steps into an output block with a constant index
+    map (init at the first step, ``+=`` per step, apply at the last) —
+    sound under Mosaic's *sequential* grid, but GPU lowering runs grid
+    programs in parallel, so the cross-program accumulation would race
+    and corrupt the sketch silently.  Don't add GPU here without first
+    porting the kernels to a parallel-safe pattern.
+    """
+    return jax.default_backend() == "tpu"
 
 
 def available_impls() -> tuple[str, ...]:
@@ -103,9 +114,10 @@ def require_impl(impl: str) -> str:
     if impl == "pallas" and not pallas_compile_supported():
         raise ImplUnavailableError(
             f"sketch impl 'pallas' (compiled) is unavailable on the "
-            f"{jax.default_backend()!r} backend: Pallas only compiles for "
-            f"TPU/GPU.  Use 'pallas-interpret' for validation or 'jnp' for "
-            f"the XLA hot path.")
+            f"{jax.default_backend()!r} backend: these kernels rely on "
+            f"TPU Mosaic's sequential grid for cross-step accumulation "
+            f"(racy on GPU, uncompilable on CPU).  Use 'pallas-interpret' "
+            f"for validation or 'jnp' for the XLA hot path.")
     return impl
 
 
@@ -115,6 +127,27 @@ def _pallas_ok(rows: int, cols: int) -> bool:
 
 def _fused_ok(rows: int, cols: int) -> bool:
     return cols % 128 == 0 and rows * cols * 4 <= _FUSED_MAX_TABLE_BYTES
+
+
+def _check_pallas_shape(rows: int, cols: int, fused: bool) -> None:
+    """Loud shape gate for an explicit ``pallas`` request.
+
+    ``auto`` silently falls back to jnp on these shapes; an explicit
+    request instead raises with the limit named — compiling anyway would
+    surface as an opaque VMEM-overflow failure deep in Mosaic.
+    """
+    kind = "fused server-step" if fused else "count-sketch"
+    if cols % 128 != 0:
+        raise ImplUnavailableError(
+            f"sketch impl 'pallas' needs cols % 128 == 0 for the {kind} "
+            f"kernels, got cols={cols}.  Use 'jnp' for this shape.")
+    limit = _FUSED_MAX_TABLE_BYTES if fused else _PALLAS_MAX_TABLE_BYTES
+    nbytes = rows * cols * 4
+    if nbytes > limit:
+        raise ImplUnavailableError(
+            f"sketch impl 'pallas' needs the ({rows}, {cols}) table "
+            f"VMEM-resident, but {nbytes} bytes exceeds the {limit}-byte "
+            f"budget for the {kind} kernels.  Use 'jnp' for this shape.")
 
 
 def _resolve(impl: str, rows: int, cols: int,
@@ -135,6 +168,7 @@ def _resolve(impl: str, rows: int, cols: int,
         return "jnp", False
     if impl == "pallas":
         require_impl(impl)
+        _check_pallas_shape(rows, cols, fused)
         return "pallas", False
     return "pallas", True    # pallas-interpret
 

@@ -174,6 +174,11 @@ def topk_mask(su: jax.Array, se: jax.Array, hi: jax.Array, lo: jax.Array,
     if error_mode not in ("zero", "subtract"):
         raise ValueError(f"bad error_mode {error_mode}")
     k = hi.shape[0]
+    if k == 0:
+        # no extracted ids: nothing hits, nothing is subtracted.  The grid
+        # below always launches >= 1 step, whose BlockSpec would read a
+        # full (block,) window from the zero-length id arrays.
+        return su.astype(jnp.float32), se.astype(jnp.float32)
     n_pad = (-k) % block
     if n_pad:
         pad_u = jnp.zeros((n_pad,), U32)

@@ -259,7 +259,7 @@ def main(argv=None):
                     choices=("auto", "jnp", "pallas-interpret", "pallas"),
                     help="count-sketch kernel impl (repro.kernels.ops): "
                          "jnp = XLA scatter/gather, pallas = compiled "
-                         "Pallas hot path (TPU/GPU; fails loudly "
+                         "Pallas hot path (TPU-only; fails loudly "
                          "elsewhere), pallas-interpret = validation-only "
                          "interpreter, auto = best compiled path")
     # event clock (fed.simtime): wall-clock federation over heterogeneous

@@ -58,7 +58,7 @@ def main():
                     choices=("auto", "jnp", "pallas-interpret", "pallas"),
                     help="count-sketch kernel impl: jnp = XLA "
                          "scatter/gather, pallas = compiled Pallas hot "
-                         "path (TPU/GPU; fails loudly elsewhere), "
+                         "path (TPU-only; fails loudly elsewhere), "
                          "pallas-interpret = validation-only interpreter")
     ap.add_argument("--straggle-prob", type=float, default=0.3,
                     help="async: probability a round's cohort reports late")

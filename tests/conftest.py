@@ -14,3 +14,25 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+_last_module = None
+
+
+@pytest.fixture(autouse=True)
+def _bound_jax_cache_growth(request):
+    """Clear jax's compilation caches at each test-module boundary.
+
+    The full suite compiles thousands of distinct programs; on CPU the
+    accumulated executables eventually segfault the process deep inside
+    XLA dispatch (reproducibly in ``test_system.py`` when run after the
+    whole suite, never in isolation).  Per-module clearing bounds that
+    growth without perturbing cross-test caching inside a module.
+    """
+    global _last_module
+    mod = request.node.nodeid.split("::", 1)[0]
+    if _last_module is not None and mod != _last_module:
+        import jax
+        jax.clear_caches()
+    _last_module = mod
+    yield

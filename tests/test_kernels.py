@@ -19,9 +19,10 @@ EDGE_SHAPES = [1, 127, 129, 3000]
 EDGE_TABLES = [(2, 384), (9, 640), (4, 1920)]
 
 # every Pallas-backed impl the dispatcher knows.  The compiled path only
-# exists on backends whose lowering Pallas supports (TPU/GPU); on CPU the
-# params skip cleanly instead of failing, so the same sweep pins compiled
-# parity the moment it runs on capable hardware.
+# exists on TPU (the kernels need Mosaic's sequential grid for their
+# cross-step accumulation); elsewhere the params skip cleanly instead of
+# failing, so the same sweep pins compiled parity the moment it runs on
+# capable hardware.
 needs_compiled = pytest.mark.skipif(
     not ops.pallas_compile_supported(),
     reason=f"backend {jax.default_backend()!r} cannot compile Pallas "
@@ -114,6 +115,29 @@ def test_compiled_pallas_unavailable_is_loud(rng):
     v = jnp.asarray(rng.normal(size=256).astype(np.float32))
     with pytest.raises(ops.ImplUnavailableError):
         ops.sketch_encode(v, 0, 3, 256, impl="pallas")
+
+
+def test_explicit_pallas_shape_gate():
+    """An explicit 'pallas' request on a shape the kernels can't take must
+    raise the documented error up front, not compile into an opaque VMEM
+    overflow.  (``auto`` silently falls back to jnp on these shapes.)"""
+    ops._check_pallas_shape(3, 384, fused=False)        # qualifying: no raise
+    with pytest.raises(ops.ImplUnavailableError, match="cols % 128"):
+        ops._check_pallas_shape(3, 300, fused=False)
+    with pytest.raises(ops.ImplUnavailableError, match="VMEM"):
+        ops._check_pallas_shape(64, 65536, fused=False)     # 16 MiB > 8 MiB
+    # the fused kernels keep more table buffers live, so their budget is
+    # tighter: a 4 MiB table passes the encode gate but not the fused one
+    ops._check_pallas_shape(8, 131072, fused=False)
+    with pytest.raises(ops.ImplUnavailableError, match="fused server-step"):
+        ops._check_pallas_shape(8, 131072, fused=True)
+
+
+@needs_compiled
+def test_explicit_pallas_bad_shape_is_loud_at_dispatch(rng):
+    v = jnp.asarray(rng.normal(size=256).astype(np.float32))
+    with pytest.raises(ops.ImplUnavailableError, match="cols % 128"):
+        ops.sketch_encode(v, 0, 3, 300, impl="pallas")
 
 
 def test_auto_never_picks_interpreter(rng):

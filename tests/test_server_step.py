@@ -138,6 +138,22 @@ def test_fused_under_jit_matches_eager(rng, lay):
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("impl", ["jnp", *PALLAS_IMPLS])
+@pytest.mark.parametrize("error_mode", ["zero", "subtract"])
+def test_topk_mask_empty_ids_is_identity(rng, impl, error_mode):
+    """k == 0 (no extracted ids) must be a clean no-op on every path.
+    The Pallas grid always launches >= 1 step, so without an early return
+    its BlockSpec would read a full block from zero-length id arrays."""
+    su = jnp.asarray(rng.normal(size=(ROWS, COLS)).astype(np.float32))
+    se = jnp.asarray(rng.normal(size=(ROWS, COLS)).astype(np.float32))
+    empty_u = jnp.zeros((0,), jnp.uint32)
+    empty_f = jnp.zeros((0,), jnp.float32)
+    su2, se2 = ops.fused_topk_mask(su, se, empty_u, empty_u, empty_f,
+                                   error_mode=error_mode, impl=impl)
+    np.testing.assert_array_equal(np.asarray(su2), np.asarray(su))
+    np.testing.assert_array_equal(np.asarray(se2), np.asarray(se))
+
+
 def test_momentum_error_defers_to_reference_algebra(rng):
     """su' = rho*su + agg; se' = lr*su' + se — exact, per element."""
     agg = jnp.asarray(rng.normal(size=(ROWS, COLS)).astype(np.float32))
