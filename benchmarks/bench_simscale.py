@@ -9,8 +9,20 @@ time-to-loss run:
 
 * ``pop_profile_100k`` — ``PopulationModel.columns`` heterogeneity draws
   for 10^5 fresh client ids (block-sampled, cached);
+* ``pop_profile_1m_{counter,legacy}`` — the 10^6-id profile draw under
+  each ``profile_stream``: counter = vectorized Philox
+  (``fed.profile_rng``), legacy = one ``default_rng`` per client.  The
+  legacy loop is linear per id, so it is *sampled* at a smaller id count
+  (annotated ``sampled_n=``) and clients/s extrapolates;
 * ``dispatch_{10k,100k}`` — one vectorized cohort dispatch of 10^4/10^5
   clients: fate draws, availability, finish times, lazy-event queue push;
+* ``dispatch_1m_{counter,legacy}`` — one *cold-cache* vectorized event
+  dispatch (profile sampling included, the stage the stream knob moves);
+  legacy again sampled smaller, annotated;
+* ``dispatch_round_100k`` — the round clock's vectorized per-client
+  metadata (cohort sample, fate draws, profile columns, merge weights):
+  everything ``--clock round --population 100000`` pays per client
+  before any gradient work;
 * ``queue_100k`` — ``BucketedEventQueue`` push_batch + drain of 10^5
   events (the heap queue paid a heap op per event);
 * ``merge_stream_256`` — streaming flat fold of 256 sketch tables with
@@ -23,6 +35,7 @@ time-to-loss run:
 
 from __future__ import annotations
 
+import dataclasses
 import resource
 import time
 
@@ -37,14 +50,15 @@ from repro.launch import simulate
 
 SKEWED = HeterogeneityConfig(compute_median=1.0, compute_sigma=0.5,
                              bandwidth_median=1e5, bandwidth_sigma=2.0)
+LEGACY = dataclasses.replace(SKEWED, profile_stream="legacy")
 
 
 def _rss_mb() -> float:
     return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
-def _bench_profiles(n: int):
-    pop = PopulationModel(SKEWED, seed=0)
+def _bench_profiles(n: int, het: HeterogeneityConfig = SKEWED):
+    pop = PopulationModel(het, seed=0)
     ids = np.arange(n, dtype=np.int64)
     t0 = time.time()
     cols = pop.columns(ids)
@@ -53,14 +67,15 @@ def _bench_profiles(n: int):
     return dt
 
 
-def _mk_orch(population: int, cohort: int, rounds: int = 8):
+def _mk_orch(population: int, cohort: int, rounds: int = 8,
+             het: HeterogeneityConfig = SKEWED, clock: str = "event"):
     cfg = simulate.micro_cfg()
     ds = simulate.micro_dataset(cfg, n_clients=population)
     fs = F.FetchSGDConfig(rows=3, cols=1 << 12, k=128)
     fed_cfg = FederationConfig(
         rounds=rounds, clients_per_round=cohort, aggregate="flat",
-        clock="event", vectorized=True,
-        simtime=SimTimeConfig(heterogeneity=SKEWED), seed=7)
+        clock=clock, vectorized=True,
+        simtime=SimTimeConfig(heterogeneity=het), seed=7)
     return Orchestrator(cfg, fs, fed_cfg, ds)
 
 
@@ -71,6 +86,39 @@ def _bench_dispatch(population: int, cohort: int, reps: int = 3):
     for r in range(1, reps):
         orch._dispatch_cohort_vec(r)
     return (time.time() - t0) / (reps - 1)
+
+
+def _bench_dispatch_cold(n: int, het: HeterogeneityConfig):
+    """One cold-cache event dispatch of a full-population cohort: unlike
+    ``_bench_dispatch`` there is no warm-up round, so the profile-stream
+    cost (the stage the ``profile_stream`` knob moves) stays in the
+    measurement."""
+    orch = _mk_orch(n, n, rounds=1, het=het)
+    t0 = time.time()
+    clients, n_dropped, _ = orch._dispatch_cohort_vec(0)
+    dt = time.time() - t0
+    assert len(clients) == n
+    return dt
+
+
+def _bench_round_dispatch(n: int, het: HeterogeneityConfig = SKEWED):
+    """Round-clock vectorized per-client metadata: everything
+    ``Orchestrator._run_round_vec`` pays per client *before* gradient
+    work — cohort sample, batched fate draws, profile columns, merge
+    weights.  (Gradient + sketch cost is population-independent: it is
+    paid per participating client at COHORT_CHUNK granularity and
+    benched by the kernels family.)"""
+    from repro.fed.orchestrator import _round_rng
+    orch = _mk_orch(n, n, rounds=1, het=het, clock="round")
+    t0 = time.time()
+    clients = orch._cohort(0)
+    codes, _delays = orch._fates(_round_rng(7, 0, stream=1), len(clients))
+    ids = np.asarray(clients)[codes != 2].astype(np.int64)
+    cols = orch.pop.columns(ids)
+    weights = orch._client_weights_vec(ids, cols)
+    dt = time.time() - t0
+    assert len(weights) == len(ids)
+    return dt
 
 
 def _bench_queue(n: int):
@@ -119,17 +167,50 @@ def _bench_run(population: int, cohort: int, rounds: int = 3):
                 rss_mb=_rss_mb())
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(micro: bool = False) -> list[tuple[str, float, str]]:
+    """``micro=True`` (CI's ``benchmarks.run --micro``) shrinks the
+    sampled-id counts of the 10^6-scale rows and skips the end-to-end
+    time-to-loss runs; row *names* stay fixed so a trajectory can line up
+    points, and every sampled row carries its ``sampled_n=`` so clients/s
+    (= n / wall) stays the comparable number.
+    """
     rows = []
 
     dt = _bench_profiles(100_000)
     rows.append(("simscale_pop_profile_100k", dt * 1e6,
                  f"clients/s={100_000 / dt:.0f}"))
 
+    # profile_stream comparison at the 10^6 scale: counter runs the full
+    # 10^6 ids (a few vectorized passes); the legacy per-client loop is
+    # linear in ids, so it is sampled and clients/s extrapolates.
+    n = 1_000_000
+    dt = _bench_profiles(n)
+    rows.append(("simscale_pop_profile_1m_counter", dt * 1e6,
+                 f"clients/s={n / dt:.0f}"))
+    n = 8_192 if micro else 65_536
+    dt = _bench_profiles(n, het=LEGACY)
+    rows.append(("simscale_pop_profile_1m_legacy", dt * 1e6,
+                 f"clients/s={n / dt:.0f} sampled_n={n}"))
+
     for n, tag in ((10_000, "10k"), (100_000, "100k")):
         dt = _bench_dispatch(n, n)
         rows.append((f"simscale_dispatch_{tag}", dt * 1e6,
                      f"clients/s={n / dt:.0f}"))
+
+    # cold-cache full-population dispatch: profile sampling included
+    n = 131_072 if micro else 1_000_000
+    dt = _bench_dispatch_cold(n, SKEWED)
+    rows.append(("simscale_dispatch_1m_counter", dt * 1e6,
+                 f"clients/s={n / dt:.0f} sampled_n={n}"))
+    n = 8_192 if micro else 65_536
+    dt = _bench_dispatch_cold(n, LEGACY)
+    rows.append(("simscale_dispatch_1m_legacy", dt * 1e6,
+                 f"clients/s={n / dt:.0f} sampled_n={n}"))
+
+    n = 16_384 if micro else 100_000
+    dt = _bench_round_dispatch(n)
+    rows.append(("simscale_dispatch_round_100k", dt * 1e6,
+                 f"clients/s={n / dt:.0f} sampled_n={n}"))
 
     dt = _bench_queue(100_000)
     rows.append(("simscale_queue_100k", dt * 1e6,
@@ -139,10 +220,12 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("simscale_merge_stream_256", dt * 1e6,
                  f"clients/s={256 / dt:.0f}"))
 
-    for n, tag in ((10_000, "10k"), (100_000, "100k")):
-        r = _bench_run(n, cohort=16)
-        rows.append((f"simscale_time_to_loss_{tag}", r["wall"] * 1e6,
-                     f"loss={r['loss']:.3f} t_virtual={r['t_virtual']:.1f}s "
-                     f"peak_rss_mb={r['rss_mb']:.0f}"))
+    if not micro:
+        for n, tag in ((10_000, "10k"), (100_000, "100k")):
+            r = _bench_run(n, cohort=16)
+            rows.append((f"simscale_time_to_loss_{tag}", r["wall"] * 1e6,
+                         f"loss={r['loss']:.3f} "
+                         f"t_virtual={r['t_virtual']:.1f}s "
+                         f"peak_rss_mb={r['rss_mb']:.0f}"))
 
     return rows

@@ -15,6 +15,7 @@ paper-reproduction benches + kernel micro-benchmarks, all CPU-runnable.
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -41,8 +42,14 @@ def main(argv=None) -> None:
                          f"({', '.join(label for label, _ in MODULES)})")
     ap.add_argument("--json", action="store_true",
                     help="persist each family's rows as BENCH_<label>.json")
-    ap.add_argument("--out-dir", default=".",
-                    help="directory for BENCH_*.json (default: cwd)")
+    ap.add_argument("--out-dir", default="bench-out",
+                    help="directory for BENCH_*.json (default: bench-out/, "
+                         "the uncommitted write location — pass '.' to "
+                         "refresh a committed repo-root trajectory snapshot)")
+    ap.add_argument("--micro", action="store_true",
+                    help="CI-sized rows: families that accept run(micro=) "
+                         "sample their largest scales at smaller id counts "
+                         "(annotated sampled_n=); others are unaffected")
     args = ap.parse_args(argv)
 
     modules = MODULES
@@ -59,8 +66,12 @@ def main(argv=None) -> None:
     failed = []
     for label, mod in modules:
         try:
+            kwargs = {}
+            if args.micro and "micro" in inspect.signature(
+                    mod.run).parameters:
+                kwargs["micro"] = True
             rows = []
-            for row in mod.run():
+            for row in mod.run(**kwargs):
                 # (name, us, derived) or (name, us, derived, mode) — the
                 # kernels family tags rows compiled/interpret/unavailable
                 name, us, derived = row[:3]

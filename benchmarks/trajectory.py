@@ -23,6 +23,18 @@ trajectory honest: a CPU-interpret number and a TPU-compiled number are
 different points, not a regression.  CI runs the kernels family every
 build and uploads the file as an artifact — the trajectory accumulates
 from there.
+
+Two locations, two roles — never the same file ambiguously:
+
+* ``bench-out/`` (gitignored) is the **single write location**: every
+  harness run (``python -m benchmarks.run --json``) and every CI tier
+  lands its fresh ``BENCH_*.json`` there, and CI uploads artifacts from
+  there.
+* repo-root ``BENCH_*.json`` files are **committed trajectory
+  snapshots**: a PR that claims a speedup re-runs the family with
+  ``--out-dir .`` and commits the result, so the number the PR claims
+  is the number the diff carries.  Nothing writes to the root unless
+  asked to.
 """
 
 from __future__ import annotations
@@ -73,6 +85,7 @@ def write(name: str, rows: list[tuple],
         "env": env_fingerprint(),
         "results": [_result(row) for row in rows],
     }
+    os.makedirs(out_dir or ".", exist_ok=True)
     path = bench_path(name, out_dir)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

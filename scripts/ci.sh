@@ -1,22 +1,27 @@
 #!/usr/bin/env bash
-# CI entry. Usage: scripts/ci.sh [tier1|tier2|kernels|all]   (repo root)
+# CI entry. Usage: scripts/ci.sh [tier1|tier2|kernels|simscale|all]  (repo root)
 #
-#   tier1   — the full test suite + one 3-round simulate smoke per policy
-#             + an instrumented observability smoke (JSONL schema-gated)
-#             + the kernels perf-trajectory family (BENCH_*.json artifact)
-#   tier2   — sketch-invariant property tests (hypothesis) + simtime +
-#             population-equivalence tests + a 20-event event-clock smoke
-#             (5 rounds x 4 clients) + a 10^4-client vectorized smoke
-#   kernels — compiled-parity suite (Pallas edge-shape + fused server-step
-#             tests; compiled params skip cleanly on interpret-only
-#             backends) + the kernels bench with the impl-comparison
-#             roofline view (bench-out/BENCH_kernels.json artifact)
+#   tier1    — the full test suite + one 3-round simulate smoke per policy
+#              + an instrumented observability smoke (JSONL schema-gated)
+#              + the kernels perf-trajectory family (BENCH_*.json artifact)
+#   tier2    — sketch-invariant property tests (hypothesis) + simtime +
+#              population-equivalence tests + a 20-event event-clock smoke
+#              (5 rounds x 4 clients) + a 10^4-client vectorized smoke
+#   kernels  — compiled-parity suite (Pallas edge-shape + fused server-step
+#              tests; compiled params skip cleanly on interpret-only
+#              backends) + the kernels bench with the impl-comparison
+#              roofline view (bench-out/BENCH_kernels.json artifact)
+#   simscale — profile-rng + population tests, a 10^4-client event smoke,
+#              a 10^5-population round-clock smoke, and the simscale bench
+#              family in --micro form (10^6 counter rows full scale, the
+#              linear legacy rows sampled) -> bench-out/BENCH_simscale.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 TIER="${1:-all}"
 case "$TIER" in
-    tier1|tier2|kernels|all) ;;
-    *) echo "usage: scripts/ci.sh [tier1|tier2|kernels|all]" >&2; exit 1 ;;
+    tier1|tier2|kernels|simscale|all) ;;
+    *) echo "usage: scripts/ci.sh [tier1|tier2|kernels|simscale|all]" >&2
+       exit 1 ;;
 esac
 
 python -m pip install -q -r requirements-dev.txt || \
@@ -42,9 +47,8 @@ if [[ "$TIER" == "tier1" || "$TIER" == "all" ]]; then
     rm -rf "$OBS_DIR"
 
     echo "== perf trajectory (kernels + simscale -> bench-out/BENCH_*.json)"
-    mkdir -p bench-out
-    python -m benchmarks.run --json --only kernels --out-dir bench-out
-    python -m benchmarks.run --json --only simscale --out-dir bench-out
+    python -m benchmarks.run --json --only kernels
+    python -m benchmarks.run --json --only simscale
 fi
 
 if [[ "$TIER" == "tier2" || "$TIER" == "all" ]]; then
@@ -61,14 +65,26 @@ if [[ "$TIER" == "tier2" || "$TIER" == "all" ]]; then
         --clients-per-round 16 --rounds 2 --bw-sigma 2.0
 fi
 
+if [[ "$TIER" == "simscale" || "$TIER" == "all" ]]; then
+    echo "== simscale: profile-stream + population-equivalence tests"
+    python -m pytest -x -q tests/test_profile_rng.py tests/test_population.py
+    echo "== population smoke: 10^4 clients, vectorized event dispatch"
+    python -m repro.launch.simulate --clock event --population 10000 \
+        --clients-per-round 16 --rounds 2 --bw-sigma 2.0
+    echo "== population smoke: 10^5 clients, vectorized round clock"
+    python -m repro.launch.simulate --clock round --population 100000 \
+        --clients-per-round 16 --rounds 2
+    echo "== simscale perf trajectory (10^6 profile/dispatch micro rows)"
+    python -m benchmarks.run --json --only simscale --micro
+fi
+
 if [[ "$TIER" == "kernels" || "$TIER" == "all" ]]; then
     echo "== kernels: compiled-parity suite"
     # compiled-Pallas params skip (not fail) on backends that can only
     # interpret Pallas; on TPU the same sweep pins compiled parity
     python -m pytest -x -q tests/test_kernels.py tests/test_server_step.py
     echo "== kernels perf trajectory (jnp + pallas impl comparison)"
-    mkdir -p bench-out
-    python -m benchmarks.run --json --only kernels --out-dir bench-out
+    python -m benchmarks.run --json --only kernels
     python scripts/report_roofline.py --kernels bench-out/BENCH_kernels.json
 fi
 echo "CI OK ($TIER)"

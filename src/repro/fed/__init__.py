@@ -15,6 +15,9 @@ into a runtime:
 * ``simtime`` — the event clock's primitives: ``ClientProfile`` (compute
   speed, uplink bandwidth, availability windows), deterministic
   ``HeterogeneityModel`` sampling, and the checkpointable ``EventQueue``.
+* ``profile_rng`` — the counter-based (Philox) profile sampler behind
+  ``HeterogeneityConfig(profile_stream="counter")``: 10^6-client profile
+  columns in a few vectorized numpy passes.
 * ``checkpoint`` — persist/restore params + ``FetchSGDState`` + round
   counter (+ the async late buffer and the event queue/virtual clock) so
   long runs survive restarts and resume byte-identically.
@@ -30,4 +33,5 @@ from .orchestrator import (FederationConfig, FedRunResult,       # noqa: F401
                            run_federated)
 from .simtime import (BucketedEventQueue, ClientProfile,         # noqa: F401
                       Event, EventQueue, HeterogeneityConfig,
-                      HeterogeneityModel, PopulationModel, SimTimeConfig)
+                      HeterogeneityModel, PopulationModel,
+                      PROFILE_STREAMS, SimTimeConfig)

@@ -446,6 +446,43 @@ class AsyncBufferedAggregator(Aggregator):
         self._observe(stats)
         return table, stats
 
+    def aggregate_stream(self, pairs, *, round_idx=0, bandwidths=None):
+        """Streaming round-clock counterpart of ``aggregate``: drain the
+        arrived buffer first, then fold fresh ``(table, weight)`` pairs as
+        the iterator yields them.
+
+        Bitwise equal to ``aggregate(list(tables), weights=...)`` after the
+        same submits: the drain happens *before* the first pair
+        materializes, so stragglers submitted while the iterator runs (the
+        vectorized round loop interleaves submits with fresh yields; their
+        ``arrival > round_idx`` always) land appended after the kept
+        entries — the exact buffer end-state of submit-everything-then-
+        aggregate.  The fresh fold and ``sum(weights)`` accumulation repeat
+        ``aggregate``'s ops in order.
+        """
+        tele = self.tele
+        late_sum, late_w, n_late, max_s = self.drain(round_idx)
+        acc = self._zeros()
+        n, fresh_w = 0, 0
+        for t, w in pairs:
+            w = float(w)
+            acc = acc + (t if w == 1.0 else w * t)
+            fresh_w = fresh_w + w
+            n += 1
+        total_w = fresh_w + late_w
+        acc = acc + late_sum if n_late else acc
+        table = acc / total_w if total_w > 0 else acc
+        if tele.enabled:
+            # the per-object path drains after this round's submits, so its
+            # buffer-depth gauge already counts them — mirror that here
+            tele.gauge("agg.async.buffer_depth").set(len(self._buffer))
+        stats = AggregationStats(
+            policy=self.name, n_fresh=n, n_late=n_late,
+            total_weight=total_w, max_staleness=max_s,
+            levels=_leaf_level(n + n_late, self.table_bytes, bandwidths))
+        self._observe(stats)
+        return table, stats
+
     def merge_timed_stream(self, arrivals, *, now, bandwidths=None):
         """Submit-and-drain an *iterator* of ``(table, produced, arrival,
         weight)`` tuples in one pass.

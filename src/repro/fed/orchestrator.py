@@ -83,21 +83,21 @@ class FederationConfig:
     straggler: StragglerModel = StragglerModel()
     clock: str = "round"                      # round | event (fed.simtime)
     simtime: simtime_lib.SimTimeConfig | None = None   # event-clock knobs
+                                              # (round clock reads only the
+                                              # heterogeneity profiles)
     weight_by: str = "uniform"                # uniform | samples | profile
     seed: int = 0
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0                 # 0 = only if dir set: final round
-    vectorized: bool = False                  # population-scale event loop:
-                                              # batched dispatch + lazy events
+    vectorized: bool = False                  # population-scale loop: batched
+                                              # dispatch (+ lazy events under
+                                              # the event clock)
 
     def __post_init__(self):
         if self.clock not in ("round", "event"):
             raise ValueError(f"clock must be 'round'|'event', got {self.clock}")
         if self.weight_by not in ("uniform", "samples", "profile"):
             raise ValueError(f"unknown weight_by {self.weight_by!r}")
-        if self.vectorized and self.clock != "event":
-            raise ValueError("vectorized population dispatch requires "
-                             "clock='event'")
 
 
 @dataclasses.dataclass
@@ -206,7 +206,8 @@ class Orchestrator:
                     if self.vectorized else None)
         self._queue = (simtime_lib.BucketedEventQueue(
                            self.sim_cfg.queue_bucket_s)
-                       if self.vectorized else simtime_lib.EventQueue())
+                       if self.vectorized and self.is_event
+                       else simtime_lib.EventQueue())
         self._now = 0.0
         # params snapshots for in-flight lazy events, keyed by dispatch
         # round; refcounted so server memory stays O(active rounds), never
@@ -247,6 +248,7 @@ class Orchestrator:
             restored = ckpt_lib.restore(fed_cfg.checkpoint_dir, self.params,
                                         self.opt_state)
             if restored is not None:
+                self._check_profile_stream(restored.extra)
                 self.params = restored.params
                 self.opt_state = restored.opt_state
                 self.start_round = restored.round_idx + 1
@@ -256,6 +258,27 @@ class Orchestrator:
                 if restored.simtime is not None:
                     self._now = float(restored.simtime["now"])
                     self._queue.load_state(restored.simtime["events"])
+
+    def _check_profile_stream(self, extra: dict) -> None:
+        """Refuse a resume whose profile rng stream differs from the
+        checkpoint's — the profiles (and so every fate/finish-time the run
+        derives from them) would silently diverge from the saved run.
+        Pre-knob checkpoints carry no ``profile_stream`` key: they were
+        trained under the legacy stream by construction.
+        """
+        if self.het is None and self.pop is None:
+            return   # run never samples profiles: the stream is irrelevant
+        saved = extra.get("profile_stream", "legacy")
+        want = self.sim_cfg.heterogeneity.profile_stream
+        if saved != want:
+            raise ValueError(
+                f"checkpoint in {self.fed_cfg.checkpoint_dir!r} was written "
+                f"with profile_stream={saved!r} but this run is configured "
+                f"with profile_stream={want!r} — resuming would resample "
+                f"every client profile from a different stream. Pass "
+                f"--profile-stream {saved} (HeterogeneityConfig("
+                f"profile_stream={saved!r})) to resume, or start a fresh "
+                f"checkpoint directory.")
 
     # -- per-round pieces ---------------------------------------------------
 
@@ -356,6 +379,9 @@ class Orchestrator:
         tele.gauge("fed.compression.upload_x").set(
             traffic["upload_compression_x"])
         tele.histogram("fed.cohort_size").observe(len(rec.cohort))
+        if self.pop is not None:
+            ev["profile_cache_blocks"] = self.pop.cache_blocks
+            tele.gauge("fed.profile_cache_blocks").set(self.pop.cache_blocks)
         if self.is_event:
             pop_n = getattr(self.dataset, "n_clients", None)
             ev.update(t_dispatch=rec.t_dispatch, t_virtual=rec.t_virtual,
@@ -416,6 +442,8 @@ class Orchestrator:
             self._wall0 = time.perf_counter()
         if self.is_event:
             return self._run_event_round(r)
+        if self.vectorized:
+            return self._run_round_vec(r)
         fc = self.fed_cfg
         round_span = self.tele.span("fed.round", round=r)
         with round_span:
@@ -478,6 +506,88 @@ class Orchestrator:
             self._emit_round(rec, stats, traffic)
             if sample_health:
                 self._emit_health(r, table, fresh, fresh_w, grad_acc)
+        return rec
+
+    def _run_round_vec(self, r: int) -> RoundRecord:
+        """Vectorized round clock: the per-object ``run_round`` loop as
+        column ops + a streaming fold.
+
+        Fates and merge weights come from the same batched draws the
+        per-object path uses (``_fates`` is already whole-cohort;
+        ``weight_by="profile"`` reads ``PopulationModel`` columns instead
+        of building one ``ClientProfile`` per client), (loss, table) pairs
+        materialize in jitted COHORT_CHUNK sweeps, and the aggregator folds
+        each fresh table as it appears — so a ``--clock round`` cohort of
+        10^5 clients never holds O(cohort) tables or profile objects, while
+        the RoundRecord stream stays byte-identical to the per-object path
+        (pinned in ``tests/test_population.py``): same loss-sum order, same
+        fold order, same straggler submits, same ``sum(weights)``
+        accumulation.
+        """
+        fc = self.fed_cfg
+        round_span = self.tele.span("fed.round", round=r)
+        with round_span:
+            clients = self._cohort(r)
+            rng = _round_rng(fc.seed, r, stream=1)
+            is_async = isinstance(self.aggregator,
+                                  agg_lib.AsyncBufferedAggregator)
+            codes, delays = self._fates(rng, len(clients))
+            sent = codes != 2
+            ids = np.asarray(clients)[sent].astype(np.int64)
+            late = codes[sent] == 1
+            late_delays = delays[sent]
+            counts = {"dropped": int(len(clients) - sent.sum()),
+                      "straggling": 0}
+            cols = self.pop.columns(ids) if len(ids) else None
+            weights = (self._client_weights_vec(ids, cols) if len(ids)
+                       else np.zeros(0))
+            losses: list[float] = []
+
+            def fresh_pairs():
+                # slot order, chunked: losses accumulate for every
+                # participating client; only fresh (table, weight) pairs
+                # reach the aggregator — stragglers submit (async) or drop
+                # (sync barrier) exactly like the per-object loop
+                for j0 in range(0, len(ids), COHORT_CHUNK):
+                    chunk = [int(c) for c in ids[j0:j0 + COHORT_CHUNK]]
+                    for k, (loss, table) in enumerate(
+                            self._compute_chunk(self.params, chunk)):
+                        j = j0 + k
+                        losses.append(loss)
+                        w = float(weights[j])
+                        if late[j]:
+                            if is_async:
+                                self.aggregator.submit(
+                                    table, produced_round=r,
+                                    arrival_round=r + int(late_delays[j]),
+                                    weight=w)
+                                counts["straggling"] += 1
+                            else:
+                                counts["dropped"] += 1
+                            continue
+                        yield table, w
+
+            with self.tele.span("fed.aggregate") as sp:
+                table, stats = self.aggregator.aggregate_stream(
+                    fresh_pairs(), round_idx=r)
+                sp.sync(table)
+            with self.tele.span("fed.server_update") as sp:
+                if stats.total_weight > 0:
+                    delta, self.opt_state = self._server(table,
+                                                         self.opt_state,
+                                                         self.lr_fn(r))
+                    self.params = self._apply(self.params, delta)
+                sp.sync(self.params)
+            traffic = self._record_traffic(
+                stats.upload_bytes, stats.n_fresh + counts["straggling"])
+            rec = RoundRecord(
+                round_idx=r, cohort=[int(c) for c in clients],
+                loss=(sum(losses) / len(losses)) if losses else None,
+                n_fresh=stats.n_fresh, n_late=stats.n_late,
+                n_dropped=counts["dropped"],
+                n_straggling=counts["straggling"],
+                upload_bytes=stats.upload_bytes)
+            self._emit_round(rec, stats, traffic)
         return rec
 
     # -- event-driven clock (fed.simtime) -----------------------------------
@@ -608,19 +718,19 @@ class Orchestrator:
                 self._cohort_fn = False
         return self._cohort_fn or None
 
-    def _materialize(self, events: list, idxs: list[int],
-                     r: int) -> dict[int, tuple[float, Any]]:
-        """Compute {idx: (loss, table)} for lazy events of dispatch round
-        ``r`` against its params snapshot.
+    def _compute_chunk(self, params,
+                       ids: list[int]) -> list[tuple[float, Any]]:
+        """(loss, table) per client, computed against ``params``.
 
         Uniform-shape client batches go through one jitted ``lax.map``
         call (``launch.steps.make_cohort_fn``), padded to COHORT_CHUNK by
         repeating the last batch — per-element map semantics mean the
         padded lanes never touch the real outputs, so each (loss, table)
-        is bitwise identical to a standalone per-event jit call.
+        is bitwise identical to a standalone per-client jit call.  Both
+        vectorized loops (lazy-event materialization and the round-clock
+        cohort sweep) share this one fn.
         """
-        params = self._snapshots[r]
-        batches = [self._client_batch(int(events[j].client)) for j in idxs]
+        batches = [self._client_batch(c) for c in ids]
         fn = self._get_cohort_fn()
         shapes = {b["tokens"].shape for b in batches}
         if (fn is not None and len(shapes) == 1
@@ -631,13 +741,20 @@ class Orchestrator:
                 toks.append(toks[-1])
                 labs.append(labs[-1])
             losses, tables = fn(params, jnp.stack(toks), jnp.stack(labs))
-            return {j: (float(losses[k]), tables[k])
-                    for k, j in enumerate(idxs)}
-        out = {}
-        for j, batch in zip(idxs, batches):
+            return [(float(losses[k]), tables[k]) for k in range(len(ids))]
+        out = []
+        for batch in batches:
             loss, grads = self.grad_fn(params, batch)
-            out[j] = (float(loss), self._sketch(grads))
+            out.append((float(loss), self._sketch(grads)))
         return out
+
+    def _materialize(self, events: list, idxs: list[int],
+                     r: int) -> dict[int, tuple[float, Any]]:
+        """Compute {idx: (loss, table)} for lazy events of dispatch round
+        ``r`` against its params snapshot."""
+        res = self._compute_chunk(self._snapshots[r],
+                                  [int(events[j].client) for j in idxs])
+        return {j: res[k] for k, j in enumerate(idxs)}
 
     def _arrival_stream(self, arrivals: list):
         """Yield ``(event, table)`` in pop order, materializing lazy events
@@ -819,7 +936,10 @@ class Orchestrator:
                     sim = {"now": self._now, "events": events}
                 ckpt_lib.save(fc.checkpoint_dir, self.params, self.opt_state,
                               r, extra={"aggregate": fc.aggregate,
-                                        "clock": fc.clock},
+                                        "clock": fc.clock,
+                                        "profile_stream":
+                                            self.sim_cfg.heterogeneity
+                                                .profile_stream},
                               late_buffer=late, simtime=sim)
         return FedRunResult(
             losses=[rec.loss for rec in records], records=records,

@@ -34,6 +34,7 @@ still an exact (discount-weighted) sketch of the weighted mean gradient.
 from __future__ import annotations
 
 import bisect
+import collections
 import dataclasses
 import heapq
 import math
@@ -41,9 +42,13 @@ from typing import Any, Iterable
 
 import numpy as np
 
-# rng stream ids — must not collide with the orchestrator's cohort (0) and
-# fate (1) streams, so profile draws never correlate with cohort sampling.
-PROFILE_STREAM = 7
+from . import profile_rng
+# rng stream id shared by both profile streams (legacy tuple seed / counter
+# key) — must not collide with the orchestrator's cohort (0) and fate (1)
+# streams, so profile draws never correlate with cohort sampling.
+from .profile_rng import PROFILE_STREAM  # noqa: F401  (re-export)
+
+PROFILE_STREAMS = ("legacy", "counter")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +97,18 @@ class HeterogeneityConfig:
     — sigma=0 collapses to a homogeneous population, sigma ~ 1+ gives the
     heavy-tailed uplink spread real device fleets show.  Availability duty
     is uniform in [duty_min, duty_max] with a random phase.
+
+    ``profile_stream`` picks which deterministic per-client stream the five
+    profile fields are drawn from:
+
+    * ``"counter"`` (default) — the vectorized Philox counter stream
+      (``fed.profile_rng``), ~10^6 clients/s; the stream for new runs.
+    * ``"legacy"`` — one ``np.random.default_rng((seed, id, stream))`` per
+      client, bit-for-bit the stream every pre-knob checkpoint was trained
+      under (~10^4 clients/s).  Resuming such a checkpoint requires it.
+
+    Both streams draw the same distributions; the scalar and vectorized
+    samplers agree field-for-field within either stream.
     """
 
     compute_median: float = 1.0       # seconds per local round
@@ -102,12 +119,34 @@ class HeterogeneityConfig:
     avail_period: float = 0.0         # 0 = everyone always available
     avail_duty_min: float = 1.0
     avail_duty_max: float = 1.0
+    profile_stream: str = "counter"
 
     def __post_init__(self):
         if self.compute_median < 0 or self.bandwidth_median <= 0:
             raise ValueError("medians must be positive")
         if not 0.0 < self.avail_duty_min <= self.avail_duty_max <= 1.0:
             raise ValueError("need 0 < duty_min <= duty_max <= 1")
+        if self.profile_stream not in PROFILE_STREAMS:
+            raise ValueError(
+                f"profile_stream must be one of {PROFILE_STREAMS}, "
+                f"got {self.profile_stream!r}")
+
+
+def _legacy_row(cfg: HeterogeneityConfig, seed: int,
+                client_id: int) -> tuple[float, float, float, float, float]:
+    """One client's (compute, bandwidth, weight, duty, offset) from the
+    legacy per-client generator stream — the exact draw order every
+    pre-``profile_stream`` checkpoint was trained under.  Do not reorder."""
+    rng = np.random.default_rng((seed, client_id, PROFILE_STREAM))
+    compute = cfg.compute_median * float(
+        np.exp(cfg.compute_sigma * rng.standard_normal()))
+    bw = cfg.bandwidth_median * float(
+        np.exp(cfg.bandwidth_sigma * rng.standard_normal()))
+    weight = float(np.exp(cfg.weight_sigma * rng.standard_normal()))
+    duty = float(rng.uniform(cfg.avail_duty_min, cfg.avail_duty_max))
+    offset = (float(rng.uniform(0.0, cfg.avail_period))
+              if cfg.avail_period > 0 else 0.0)
+    return compute, bw, weight, duty, offset
 
 
 class HeterogeneityModel:
@@ -122,20 +161,18 @@ class HeterogeneityModel:
         prof = self._cache.get(client_id)
         if prof is None:
             cfg = self.cfg
-            rng = np.random.default_rng((self.seed, client_id,
-                                         PROFILE_STREAM))
-            compute = cfg.compute_median * float(
-                np.exp(cfg.compute_sigma * rng.standard_normal()))
-            bw = cfg.bandwidth_median * float(
-                np.exp(cfg.bandwidth_sigma * rng.standard_normal()))
-            weight = float(np.exp(cfg.weight_sigma * rng.standard_normal()))
-            duty = float(rng.uniform(cfg.avail_duty_min, cfg.avail_duty_max))
-            offset = (float(rng.uniform(0.0, cfg.avail_period))
-                      if cfg.avail_period > 0 else 0.0)
+            if cfg.profile_stream == "counter":
+                # a 1-element draw: elementwise Philox, so bit-identical to
+                # the same id inside any vectorized block
+                c = profile_rng.profile_columns(
+                    cfg, self.seed, np.asarray([client_id], np.int64))
+                row = tuple(float(c[name][0]) for name in profile_rng.COLS)
+            else:
+                row = _legacy_row(cfg, self.seed, client_id)
             prof = ClientProfile(
-                compute_seconds=compute, bandwidth=bw, weight=weight,
-                avail_period=cfg.avail_period, avail_duty=duty,
-                avail_offset=offset)
+                compute_seconds=row[0], bandwidth=row[1], weight=row[2],
+                avail_period=cfg.avail_period, avail_duty=row[3],
+                avail_offset=row[4])
             self._cache[client_id] = prof
         return prof
 
@@ -144,13 +181,17 @@ class PopulationModel:
     """Vectorized ``HeterogeneityModel``: batched per-client profile columns.
 
     Samples the *same* per-client stream as ``HeterogeneityModel.profile``
-    — ``np.random.default_rng((seed, client_id, PROFILE_STREAM))`` drawing
-    compute, bandwidth, weight, duty, offset in that order — so
-    ``profile(i)`` is field-for-field equal for the same seed (pinned in
+    (whichever ``cfg.profile_stream`` selects: the vectorized Philox counter
+    stream of ``fed.profile_rng``, or the legacy per-client
+    ``default_rng((seed, id, PROFILE_STREAM))`` draws) — so ``profile(i)``
+    is field-for-field equal for the same seed in both modes (pinned in
     ``tests/test_population.py``).  Clients are sampled lazily in fixed-size
     id blocks and cached as float64 column arrays, which is what lets the
     event loop dispatch 10^4-10^6-client cohorts without ever holding one
-    Python ``ClientProfile`` per client.
+    Python ``ClientProfile`` per client.  The block cache is a bounded LRU
+    (``max_cached_blocks``, default 2048 blocks = ~8.4M clients at the
+    default block size) — eviction is safe because a block is a pure
+    function of ``(cfg, seed, block_id)`` and refills identically.
 
     All vectorized time arithmetic (``next_available`` / ``finish_times``)
     performs the identical IEEE-double operations as the scalar
@@ -159,33 +200,36 @@ class PopulationModel:
     bitwise.
     """
 
-    COLS = ("compute", "bandwidth", "weight", "duty", "offset")
+    COLS = profile_rng.COLS
 
     def __init__(self, cfg: HeterogeneityConfig, seed: int = 0,
-                 block: int = 4096):
+                 block: int = 4096, max_cached_blocks: int = 2048):
         if block < 1:
             raise ValueError("block must be >= 1")
+        if max_cached_blocks < 1:
+            raise ValueError("max_cached_blocks must be >= 1")
         self.cfg = cfg
         self.seed = seed
         self.block = int(block)
-        self._blocks: dict[int, np.ndarray] = {}   # block_id -> (block, 5)
+        self.max_cached_blocks = int(max_cached_blocks)
+        # block_id -> (block, 5) column array, LRU order (oldest first)
+        self._blocks: collections.OrderedDict[int, np.ndarray] = \
+            collections.OrderedDict()
+
+    @property
+    def cache_blocks(self) -> int:
+        """Resident profile blocks (the ``fed.profile_cache_blocks`` gauge)."""
+        return len(self._blocks)
 
     def _fill(self, b: int) -> np.ndarray:
         cfg = self.cfg
+        ids = b * self.block + np.arange(self.block, dtype=np.int64)
+        if cfg.profile_stream == "counter":
+            c = profile_rng.profile_columns(cfg, self.seed, ids)
+            return np.column_stack([c[name] for name in self.COLS])
         out = np.empty((self.block, len(self.COLS)), np.float64)
         for i in range(self.block):
-            # exact draw order of HeterogeneityModel.profile
-            rng = np.random.default_rng((self.seed, b * self.block + i,
-                                         PROFILE_STREAM))
-            out[i, 0] = cfg.compute_median * float(
-                np.exp(cfg.compute_sigma * rng.standard_normal()))
-            out[i, 1] = cfg.bandwidth_median * float(
-                np.exp(cfg.bandwidth_sigma * rng.standard_normal()))
-            out[i, 2] = float(np.exp(cfg.weight_sigma * rng.standard_normal()))
-            out[i, 3] = float(rng.uniform(cfg.avail_duty_min,
-                                          cfg.avail_duty_max))
-            out[i, 4] = (float(rng.uniform(0.0, cfg.avail_period))
-                         if cfg.avail_period > 0 else 0.0)
+            out[i] = _legacy_row(cfg, self.seed, int(ids[i]))
         return out
 
     def columns(self, ids: np.ndarray) -> dict[str, np.ndarray]:
@@ -194,13 +238,26 @@ class PopulationModel:
         ids = np.asarray(ids, np.int64)
         if ids.size and ids.min() < 0:
             raise ValueError("client ids must be >= 0")
+        # group ids by block with one argsort instead of one full-length
+        # mask scan per block — the scan is O(ids * blocks) and dominated
+        # the 10^6-id draw (see BENCH_simscale.json pop_profile_1m rows)
+        bids = ids // self.block
+        order = np.argsort(bids, kind="stable")
+        uniq = np.unique(bids)
+        starts = np.searchsorted(bids[order], uniq, side="left")
+        ends = np.append(starts[1:], ids.size)
         rows = np.empty((ids.size, len(self.COLS)), np.float64)
-        for b in np.unique(ids // self.block):
-            blk = self._blocks.get(int(b))
+        for k in range(len(uniq)):
+            b = int(uniq[k])
+            blk = self._blocks.get(b)
             if blk is None:
-                blk = self._blocks[int(b)] = self._fill(int(b))
-            sel = (ids // self.block) == b
-            rows[sel] = blk[ids[sel] - b * self.block]
+                blk = self._blocks[b] = self._fill(b)
+                while len(self._blocks) > self.max_cached_blocks:
+                    self._blocks.popitem(last=False)
+            else:
+                self._blocks.move_to_end(b)
+            idx = order[starts[k]:ends[k]]
+            rows[idx] = blk[ids[idx] - b * self.block]
         return dict(zip(self.COLS, rows.T))
 
     def profile(self, client_id: int) -> ClientProfile:

@@ -224,6 +224,9 @@ def main(argv=None):
             --clock event --aggregate async --rounds 5 --bw-sigma 2.0
         PYTHONPATH=src python -m repro.launch.simulate \
             --clock event --population 100000 --rounds 3
+        PYTHONPATH=src python -m repro.launch.simulate \
+            --clock round --population 100000 --rounds 3 \
+            --weight-by profile --profile-stream counter
     """
     import argparse
 
@@ -238,10 +241,19 @@ def main(argv=None):
                     help="cohort size (default 4; with --population, "
                          "max(4, population // 100))")
     ap.add_argument("--population", type=int, default=None,
-                    help="event clock only: total client population; "
-                         "switches on the vectorized dispatch path "
-                         "(lazy events + bucketed queue) so 10^4-10^6 "
+                    help="total client population; switches on the "
+                         "vectorized dispatch path (event clock: lazy "
+                         "events + bucketed queue; round clock: column "
+                         "fates/weights + streaming folds) so 10^4-10^6 "
                          "clients simulate with O(sketch) server memory")
+    ap.add_argument("--profile-stream", default="counter",
+                    choices=("legacy", "counter"),
+                    help="per-client profile rng: counter = vectorized "
+                         "Philox (fed.profile_rng, ~10^6 clients/s, the "
+                         "default); legacy = per-client default_rng, "
+                         "bit-compatible with pre-knob checkpoints "
+                         "(~10^4 clients/s). A resume must match the "
+                         "checkpoint's stream")
     ap.add_argument("--min-clients-per-round", type=int, default=None)
     ap.add_argument("--tree-fanout", type=int, default=2)
     ap.add_argument("--dropout-prob", type=float, default=0.0)
@@ -290,12 +302,8 @@ def main(argv=None):
                          "(0 = never; only active with --metrics)")
     args = ap.parse_args(argv)
 
-    if args.population is not None:
-        if args.population < 1:
-            ap.error(f"--population must be >= 1, got {args.population}")
-        if args.clock != "event":
-            ap.error("--population requires --clock event (the vectorized "
-                     "dispatch path only exists for the event clock)")
+    if args.population is not None and args.population < 1:
+        ap.error(f"--population must be >= 1, got {args.population}")
     if args.clients_per_round is None:
         args.clients_per_round = (max(4, args.population // 100)
                                   if args.population is not None else 4)
@@ -312,19 +320,21 @@ def main(argv=None):
     if telemetry.trace_enabled:
         from repro.kernels import ops as kernel_ops
         kernel_ops.set_telemetry(telemetry)
-    simtime = None
-    if args.clock == "event":
-        simtime = fed.SimTimeConfig(
-            staleness_lambda=args.staleness_lambda, max_age=args.max_age,
-            quorum=args.quorum, link_bandwidth=args.link_bandwidth,
-            heterogeneity=fed.HeterogeneityConfig(
-                compute_median=args.compute_median,
-                compute_sigma=args.compute_sigma,
-                bandwidth_median=args.bw_median,
-                bandwidth_sigma=args.bw_sigma,
-                avail_period=args.avail_period,
-                avail_duty_min=args.avail_duty_min,
-                avail_duty_max=args.avail_duty_max))
+    # built for both clocks: the round clock reads the heterogeneity
+    # profiles too (weight_by=profile, vectorized column weights), and
+    # --profile-stream must thread through either way
+    simtime = fed.SimTimeConfig(
+        staleness_lambda=args.staleness_lambda, max_age=args.max_age,
+        quorum=args.quorum, link_bandwidth=args.link_bandwidth,
+        heterogeneity=fed.HeterogeneityConfig(
+            compute_median=args.compute_median,
+            compute_sigma=args.compute_sigma,
+            bandwidth_median=args.bw_median,
+            bandwidth_sigma=args.bw_sigma,
+            avail_period=args.avail_period,
+            avail_duty_min=args.avail_duty_min,
+            avail_duty_max=args.avail_duty_max,
+            profile_stream=args.profile_stream))
     fed_cfg = fed.FederationConfig(
         rounds=args.rounds, clients_per_round=args.clients_per_round,
         min_clients_per_round=args.min_clients_per_round,

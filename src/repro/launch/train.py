@@ -71,6 +71,11 @@ def main():
     ap.add_argument("--compute-median", type=float, default=1.0)
     ap.add_argument("--bw-median", type=float, default=1e6)
     ap.add_argument("--bw-sigma", type=float, default=1.0)
+    ap.add_argument("--profile-stream", default="counter",
+                    choices=("legacy", "counter"),
+                    help="per-client profile rng: counter = vectorized "
+                         "Philox (fed.profile_rng), legacy = per-client "
+                         "default_rng (pre-knob checkpoint compatible)")
     obs.add_cli_flags(ap)   # --metrics PATH.jsonl / --trace / --obs-summary
     args = ap.parse_args()
     tele = obs.from_args(args, run="train", arch=args.arch,
@@ -124,7 +129,8 @@ def main():
         het = fed_sim.HeterogeneityModel(fed_sim.HeterogeneityConfig(
             compute_median=args.compute_median,
             bandwidth_median=args.bw_median,
-            bandwidth_sigma=args.bw_sigma), seed=1234)
+            bandwidth_sigma=args.bw_sigma,
+            profile_stream=args.profile_stream), seed=1234)
         table_bytes = F.upload_bytes(fs)
         now = 0.0
     with mesh:

@@ -9,11 +9,18 @@ The vectorized event path (``FederationConfig(vectorized=True)``) must be
   schedules and arbitrary bucket widths (seeded property sweeps; the
   container has no ``hypothesis``, so the strategies are explicit rngs);
 * ``PopulationModel.profile(i)`` equals ``HeterogeneityModel.profile(i)``
-  field-for-field (same per-client rng stream);
+  field-for-field (same per-client rng stream) — under *both*
+  ``profile_stream`` modes, across block boundaries and up to id 10^6-1;
+* the legacy stream is pinned to hardcoded values (bit-for-bit what the
+  pre-knob per-client ``default_rng`` drew), and the counter stream to its
+  own hardcoded values, so neither can silently drift;
 * small-population runs produce byte-identical RoundRecord streams and
-  checkpoint files in both modes, for every aggregation policy;
+  checkpoint files in both modes, for every aggregation policy — on the
+  event clock *and* on the vectorized round clock;
 * checkpoints written mid-run by the bucketed queue resume byte-identically,
-  and legacy per-event-layout checkpoints still load (migration shim);
+  legacy per-event-layout checkpoints still load (migration shim), the
+  ``profile_stream`` knob is persisted, and a mismatched resume is refused
+  loudly instead of silently resampling every profile;
 * degenerate configurations fail with actionable ``ValueError``s instead
   of an empty-heap pop deep in the event loop.
 """
@@ -47,6 +54,8 @@ WINDOWED = HeterogeneityConfig(compute_median=1.0, compute_sigma=0.5,
                                bandwidth_median=1e5, bandwidth_sigma=2.0,
                                avail_period=50.0, avail_duty_min=0.4,
                                avail_duty_max=0.9)
+SKEWED_LEGACY = dataclasses.replace(SKEWED, profile_stream="legacy")
+WINDOWED_LEGACY = dataclasses.replace(WINDOWED, profile_stream="legacy")
 CFG = F.FetchSGDConfig(rows=3, cols=1 << 10, k=64)
 
 
@@ -142,13 +151,17 @@ def test_empty_queue_pop_raises_actionable_error():
 # ------------------------------------------------------------ population
 
 
-@pytest.mark.parametrize("het", [SKEWED, WINDOWED],
-                         ids=["skewed", "windowed"])
+@pytest.mark.parametrize("het", [SKEWED, WINDOWED, SKEWED_LEGACY,
+                                 WINDOWED_LEGACY],
+                         ids=["skewed-counter", "windowed-counter",
+                              "skewed-legacy", "windowed-legacy"])
 @pytest.mark.parametrize("seed", [0, 3])
 def test_population_profile_matches_scalar_model(het, seed):
     pop = PopulationModel(het, seed=seed, block=16)   # small: cross blocks
     scalar = HeterogeneityModel(het, seed=seed)
-    ids = [0, 1, 15, 16, 17, 255, 4096, 12345]
+    # edge ids: 0, both sides of block boundaries (the model's 16 and the
+    # production default 4096), and the top of a 10^6 population
+    ids = [0, 1, 15, 16, 17, 255, 4095, 4096, 4097, 12345, 10**6 - 1]
     for i in ids:
         assert dataclasses.asdict(pop.profile(i)) \
             == dataclasses.asdict(scalar.profile(i)), f"client {i}"
@@ -161,6 +174,61 @@ def test_population_profile_matches_scalar_model(het, seed):
         assert cols["weight"][j] == p.weight
         assert cols["duty"][j] == p.avail_duty
         assert cols["offset"][j] == p.avail_offset
+
+
+# (client_id -> (compute, bandwidth, weight, duty, offset)) at seed=0.
+# The legacy rows are bit-for-bit what the pre-``profile_stream`` code drew
+# from ``default_rng((seed, id, PROFILE_STREAM))`` — the knob's "legacy"
+# setting must never drift from them.  The counter rows pin the Philox
+# stream the same way so neither stream can change silently.
+_WINDOWED_PINS = {
+    "legacy": {
+        0:    (0.9661987832624784, 110207.3568160375, 1.0,
+               0.4987496208921432, 36.21251552743903),
+        7:    (0.9654298674906803, 89325.31707962169, 1.0,
+               0.7060839261070906, 20.512630832739763),
+        4096: (1.3419156203041562, 473236.0883167951, 1.0,
+               0.6885781048376034, 38.586688483348496),
+    },
+    "counter": {
+        0:    (0.8593800829865379, 9344905.828058816, 1.0,
+               0.6366155029599134, 19.872914595109453),
+        7:    (1.8402220485257532, 1946715.4032803436, 1.0,
+               0.40240712494531455, 40.18847541110473),
+        4096: (0.7281673657404011, 4680.981799537808, 1.0,
+               0.8875065395323629, 32.39937113600317),
+    },
+}
+
+
+@pytest.mark.parametrize("stream", ["legacy", "counter"])
+def test_profile_stream_pinned_values(stream):
+    het = dataclasses.replace(WINDOWED, profile_stream=stream)
+    scalar = HeterogeneityModel(het, seed=0)
+    pop = PopulationModel(het, seed=0)
+    for cid, (compute, bw, weight, duty, offset) in \
+            _WINDOWED_PINS[stream].items():
+        for p in (scalar.profile(cid), pop.profile(cid)):
+            assert (p.compute_seconds, p.bandwidth, p.weight,
+                    p.avail_duty, p.avail_offset) \
+                == (compute, bw, weight, duty, offset), (stream, cid)
+
+
+def test_population_block_cache_is_bounded_lru():
+    pop = PopulationModel(SKEWED, seed=0, block=16, max_cached_blocks=3)
+    first = pop.columns(np.arange(16, dtype=np.int64))
+    pop.columns(np.arange(128, dtype=np.int64))     # 8 blocks through cap 3
+    assert pop.cache_blocks == 3
+    assert 0 not in pop._blocks                     # oldest evicted
+    # refill after eviction is bitwise identical: blocks are pure functions
+    again = pop.columns(np.arange(16, dtype=np.int64))
+    for k in pop.COLS:
+        assert np.array_equal(first[k], again[k])
+
+
+def test_population_rejects_bad_cache_config():
+    with pytest.raises(ValueError, match="max_cached_blocks"):
+        PopulationModel(SKEWED, max_cached_blocks=0)
 
 
 def test_population_time_math_matches_scalar_profile():
@@ -280,16 +348,19 @@ def micro():
 
 
 def _orch(micro, vectorized, aggregate, *, rounds=3, population=None,
-          ckdir=None, every=0, total_rounds=None, het=SKEWED, seed=0):
+          ckdir=None, every=0, total_rounds=None, het=SKEWED, seed=0,
+          clock="event", weight_by="uniform"):
     cfg, ds = micro
     if population is not None:
         ds = simulate.micro_dataset(cfg, n_clients=population)
     fed_cfg = fed.FederationConfig(
         rounds=rounds, clients_per_round=6, aggregate=aggregate,
-        clock="event", vectorized=vectorized, seed=seed,
+        clock=clock, vectorized=vectorized, seed=seed,
+        weight_by=weight_by,
         simtime=fed.SimTimeConfig(
             heterogeneity=het,
-            quorum=3 if aggregate == "async" else None),
+            quorum=3 if (aggregate == "async" and clock == "event")
+            else None),
         straggler=fed.StragglerModel(dropout_prob=0.15, straggle_prob=0.25,
                                      max_delay=2),
         checkpoint_dir=ckdir, checkpoint_every=every)
@@ -306,6 +377,32 @@ def test_vectorized_round_records_byte_identical(micro, aggregate):
         == [dataclasses.asdict(r) for r in vec.records]
     assert ref.losses == vec.losses
     assert ref.traffic == vec.traffic
+
+
+@pytest.mark.parametrize("het", [SKEWED, SKEWED_LEGACY],
+                         ids=["counter", "legacy"])
+@pytest.mark.parametrize("aggregate", ["flat", "tree", "async"])
+def test_round_clock_vectorized_byte_identical(micro, aggregate, het):
+    # --clock round + vectorized=True: the streaming column-op round loop
+    # must reproduce the per-object loop byte-for-byte — same fates, same
+    # loss-sum order, same fold order, same straggler submits.  weight_by=
+    # "profile" forces the merge weights through PopulationModel.columns.
+    kw = dict(clock="round", weight_by="profile", het=het)
+    ref = _orch(micro, False, aggregate, **kw).run()
+    vec = _orch(micro, True, aggregate, **kw).run()
+    assert [dataclasses.asdict(r) for r in ref.records] \
+        == [dataclasses.asdict(r) for r in vec.records]
+    assert ref.losses == vec.losses
+    assert ref.traffic == vec.traffic
+
+
+def test_round_clock_vectorized_100k_population(micro):
+    # the acceptance-scale path: a 10^5-client population on the round
+    # clock dispatches through the vectorized metadata ops and completes
+    rec = _orch(micro, True, "flat", rounds=2, population=100_000,
+                clock="round", weight_by="profile").run()
+    assert len(rec.records) == 2
+    assert all(np.isfinite(loss) for loss in rec.losses)
 
 
 def test_vectorized_checkpoints_content_identical(micro, tmp_path):
@@ -382,6 +479,50 @@ def test_checkpoint_rejects_lazy_events(micro, tmp_path):
                       simtime={"now": 1.0, "events": [_mk_event(2.0)]})
 
 
+@pytest.mark.parametrize("stream", ["counter", "legacy"])
+def test_checkpoint_persists_profile_stream(micro, tmp_path, stream):
+    het = dataclasses.replace(SKEWED, profile_stream=stream)
+    d = str(tmp_path)
+    _orch(micro, True, "flat", rounds=2, ckdir=d, every=1, het=het).run()
+    sidecars = sorted(f for f in os.listdir(d) if f.endswith(".json"))
+    assert sidecars
+    for name in sidecars:
+        with open(os.path.join(d, name)) as f:
+            assert json.load(f)["extra"]["profile_stream"] == stream, name
+    # same-stream resume is accepted
+    _orch(micro, True, "flat", rounds=2, ckdir=d, every=0, het=het)
+
+
+def test_checkpoint_refuses_mismatched_profile_stream(micro, tmp_path):
+    d = str(tmp_path)
+    _orch(micro, True, "flat", rounds=2, ckdir=d, every=1, het=SKEWED).run()
+    with pytest.raises(ValueError, match="profile_stream"):
+        _orch(micro, True, "flat", rounds=2, ckdir=d, every=0,
+              het=SKEWED_LEGACY)
+
+
+def test_checkpoint_missing_stream_key_means_legacy(micro, tmp_path):
+    # pre-knob checkpoints carry no ``profile_stream`` extra: they were
+    # trained under the legacy stream by construction, so a legacy resume
+    # loads and a counter resume is refused
+    d = str(tmp_path)
+    _orch(micro, True, "flat", rounds=2, ckdir=d, every=1,
+          het=SKEWED_LEGACY).run()
+    for name in os.listdir(d):
+        if not name.endswith(".json"):
+            continue
+        p = os.path.join(d, name)
+        with open(p) as f:
+            info = json.load(f)
+        info["extra"].pop("profile_stream")
+        with open(p, "w") as f:
+            json.dump(info, f)
+    _orch(micro, True, "flat", rounds=2, ckdir=d, every=0,
+          het=SKEWED_LEGACY)                        # loads fine
+    with pytest.raises(ValueError, match="profile_stream=.legacy."):
+        _orch(micro, True, "flat", rounds=2, ckdir=d, every=0, het=SKEWED)
+
+
 # ----------------------------------------------------------- degenerate
 
 
@@ -395,10 +536,9 @@ def test_empty_population_raises(micro):
         _orch(micro, True, "flat", population=0)
 
 
-def test_vectorized_requires_event_clock():
-    with pytest.raises(ValueError, match="vectorized"):
-        fed.FederationConfig(rounds=2, clients_per_round=4,
-                             vectorized=True, clock="round")
+def test_unknown_profile_stream_raises():
+    with pytest.raises(ValueError, match="profile_stream"):
+        dataclasses.replace(SKEWED, profile_stream="quantum")
 
 
 # -------------------------------------------------------------- metrics

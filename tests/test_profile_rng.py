@@ -1,0 +1,163 @@
+"""Counter-based profile sampler: algorithm-level correctness.
+
+``fed.profile_rng`` is the ``profile_stream="counter"`` generator; its
+contract with the rest of the repo (scalar/vectorized equality, legacy
+pins, checkpoint refusal) is pinned in ``tests/test_population.py``.
+This file pins the *algorithm*:
+
+* the Philox-4x32-10 core matches the Random123 reference known-answer
+  vectors bit-for-bit — it is the published generator, not an ad-hoc
+  hash;
+* uniforms land strictly inside (0, 1), are deterministic, and decorrelate
+  across ids / columns / seeds / streams;
+* the PPND16 inverse normal CDF round-trips through the normal CDF
+  (``math.erf``) at ~1e-13 over the full (0, 1) range, tails included.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.fed import profile_rng as pr
+
+# ------------------------------------------------------------- philox KATs
+
+# Random123 reference vectors for philox4x32 with 10 rounds
+# (Salmon et al., SC'11, kat_vectors): (counter, key) -> output words.
+KATS = [
+    (((0x00000000, 0x00000000, 0x00000000, 0x00000000),
+      (0x00000000, 0x00000000)),
+     (0x6627e8d5, 0xe169c58d, 0xbc57ac4c, 0x9b00dbd8)),
+    (((0xffffffff, 0xffffffff, 0xffffffff, 0xffffffff),
+      (0xffffffff, 0xffffffff)),
+     (0x408f276d, 0x41c83b0e, 0xa20bc7c6, 0x6d5451fd)),
+    (((0x243f6a88, 0x85a308d3, 0x13198a2e, 0x03707344),
+      (0xa4093822, 0x299f31d0)),
+     (0xd16cfe09, 0x94fdcceb, 0x5001e420, 0x24126ea1)),
+]
+
+
+@pytest.mark.parametrize("inputs,expected", KATS,
+                         ids=["zeros", "ones", "pi"])
+def test_philox_known_answer_vectors(inputs, expected):
+    (counter, key) = inputs
+    out = pr.philox4x32(key, tuple(np.asarray([c], np.uint64)
+                                   for c in counter))
+    assert tuple(int(w[0]) for w in out) == expected
+
+
+def test_philox_vectorized_matches_elementwise():
+    # the whole design rests on elementwise determinism: a big batch must
+    # produce the same words as many one-element calls
+    rng = np.random.default_rng(0)
+    ctr = tuple(rng.integers(0, 1 << 32, size=64, dtype=np.uint64)
+                for _ in range(4))
+    key = (12345, 67890)
+    batch = pr.philox4x32(key, ctr)
+    for i in range(0, 64, 7):
+        one = pr.philox4x32(key, tuple(c[i:i + 1] for c in ctr))
+        assert all(int(o[0]) == int(b[i]) for o, b in zip(one, batch))
+
+
+# --------------------------------------------------------------- uniforms
+
+
+def test_uniforms_open_interval_and_deterministic():
+    ids = np.arange(100_000, dtype=np.int64)
+    u = pr.uniforms(seed=3, ids=ids, column=0)
+    assert u.dtype == np.float64 and u.shape == ids.shape
+    assert float(u.min()) > 0.0 and float(u.max()) < 1.0
+    assert np.array_equal(u, pr.uniforms(seed=3, ids=ids, column=0))
+    # 53-bit grid: moments behave like a uniform draw
+    assert abs(float(u.mean()) - 0.5) < 5e-3
+    assert abs(float(u.var()) - 1.0 / 12.0) < 5e-3
+
+
+def test_uniforms_decorrelate_across_ids_columns_seeds_streams():
+    ids = np.arange(4096, dtype=np.int64)
+    base = pr.uniforms(seed=3, ids=ids, column=0)
+    assert len(np.unique(base)) == len(ids)          # no id collisions
+    for other in (pr.uniforms(seed=3, ids=ids, column=1),
+                  pr.uniforms(seed=4, ids=ids, column=0),
+                  pr.uniforms(seed=3, ids=ids, column=0, stream=11)):
+        assert not np.array_equal(base, other)
+        assert abs(float(np.corrcoef(base, other)[0, 1])) < 0.05
+
+
+def test_uniforms_reject_negative_ids():
+    with pytest.raises(ValueError, match=">= 0"):
+        pr.uniforms(seed=0, ids=np.asarray([1, -2]), column=0)
+
+
+def test_uniforms_huge_ids_use_high_counter_word():
+    # ids above 2^32 must not alias ids below it (id_hi32 is counter word 1)
+    lo = pr.uniforms(seed=0, ids=np.asarray([5], np.int64), column=0)
+    hi = pr.uniforms(seed=0, ids=np.asarray([5 + (1 << 32)], np.int64),
+                     column=0)
+    assert lo[0] != hi[0]
+
+
+# ------------------------------------------------------------------ icdf
+
+
+def _normal_cdf(x: float) -> float:
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+def test_normal_icdf_round_trips_through_erf():
+    # covers all three PPND16 regions: central, near tail (r <= 5), far
+    # tail (r > 5, i.e. u below ~2.9e-12)
+    u = np.concatenate([np.linspace(1e-4, 1.0 - 1e-4, 1001),
+                        np.asarray([1e-6, 1e-9, 2e-13, 1.0 - 1e-6,
+                                    1.0 - 1e-9])])
+    x = pr.normal_icdf(u)
+    back = np.asarray([_normal_cdf(float(v)) for v in x])
+    np.testing.assert_allclose(back, u, rtol=5e-13, atol=1e-15)
+
+
+def test_normal_icdf_symmetry_and_anchors():
+    u = np.asarray([0.5, 0.975, 0.25, 0.75, 0.84134474606854293])
+    x = pr.normal_icdf(u)
+    assert x[0] == 0.0
+    assert x[2] == -x[3]        # central region: exact antisymmetry in q
+    assert abs(x[1] - 1.959963984540054) < 1e-12
+    assert abs(x[4] - 1.0) < 1e-12
+    grid = np.linspace(1e-8, 1.0 - 1e-8, 4001)
+    assert np.all(np.diff(pr.normal_icdf(grid)) > 0)   # strictly monotone
+
+
+# -------------------------------------------------------- profile columns
+
+
+class _Cfg:
+    compute_median = 2.0
+    compute_sigma = 0.5
+    bandwidth_median = 1e5
+    bandwidth_sigma = 2.0
+    weight_sigma = 0.3
+    avail_duty_min = 0.4
+    avail_duty_max = 0.9
+    avail_period = 50.0
+
+
+def test_profile_columns_shapes_ranges_and_independence():
+    ids = np.arange(10_000, dtype=np.int64)
+    c = pr.profile_columns(_Cfg, seed=1, ids=ids)
+    assert set(c) == set(pr.COLS)
+    assert all(v.shape == ids.shape for v in c.values())
+    assert float(c["compute"].min()) > 0 and float(c["bandwidth"].min()) > 0
+    assert float(c["duty"].min()) >= 0.4 and float(c["duty"].max()) <= 0.9
+    assert float(c["offset"].min()) >= 0.0
+    assert float(c["offset"].max()) <= _Cfg.avail_period
+    # lognormal medians land where configured (median is exp(mu))
+    assert abs(float(np.median(c["compute"])) - 2.0) < 0.05
+    assert abs(math.log(float(np.median(c["bandwidth"])) / 1e5)) < 0.1
+
+
+def test_profile_columns_zero_period_means_zero_offset():
+    class NoWindow(_Cfg):
+        avail_period = 0.0
+    c = pr.profile_columns(NoWindow, seed=1,
+                           ids=np.arange(64, dtype=np.int64))
+    assert not c["offset"].any()
